@@ -1,0 +1,57 @@
+"""Paper Fig. 7 — latency breakdown: init / ticketing / update /
+materialization fractions of fully concurrent aggregation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import N_ROWS, emit, gen_keys, time_fn
+from repro.core import ticketing as tk
+from repro.core import updates as up
+
+
+def run(n=None):
+    n = n or min(N_ROWS, 1 << 19)
+    for card in ["low", "high", "unique"]:
+        keys = jnp.asarray(gen_keys(n, card, "uniform"))
+        uniq = {"low": 1000, "high": n // 10, "unique": n}[card]
+        cap = 1 << (2 * uniq - 1).bit_length()
+        vals = jnp.ones((n,), jnp.float32)
+
+        @jax.jit
+        def init_stage():
+            return tk.make_table(cap, max_groups=uniq), up.init_acc(uniq, "sum")
+
+        table, acc = init_stage()
+
+        @jax.jit
+        def ticket_stage(table, keys):
+            return tk.get_or_insert(table, keys)
+
+        tickets, table2 = ticket_stage(table, keys)
+
+        @jax.jit
+        def update_stage(acc, tickets, vals):
+            return up.scatter_update(acc, tickets, vals, kind="sum")
+
+        acc2 = update_stage(acc, tickets, vals)
+
+        @jax.jit
+        def materialize_stage(table, acc):
+            return table.key_by_ticket, up.finalize("sum", acc)
+
+        us_init = time_fn(init_stage)
+        us_ticket = time_fn(ticket_stage, table, keys)
+        us_update = time_fn(update_stage, acc, tickets, vals)
+        us_mat = time_fn(materialize_stage, table2, acc2)
+        total = us_init + us_ticket + us_update + us_mat
+        emit(f"fig7_init_{card}", us_init, f"frac={us_init/total:.2f}")
+        emit(f"fig7_ticket_{card}", us_ticket, f"frac={us_ticket/total:.2f}")
+        emit(f"fig7_update_{card}", us_update, f"frac={us_update/total:.2f}")
+        emit(f"fig7_materialize_{card}", us_mat, f"frac={us_mat/total:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,62 @@
+"""Paper Table 3 — peak memory per aggregation method.
+
+Byte-exact buffer accounting of every live array each method allocates
+(the container's CPU heap can't fit the paper's 100M-row runs at 32
+workers, so we account analytically from the static shapes the jitted
+programs allocate and verify the base case against actual .nbytes).
+
+  atomic/scatter     : table (2·cap·4B) + dense acc (G·4B)
+  thread-local       : table + k·G·4B local accs (merged via psum)
+  partitioned        : k·(preagg tables) + k·spill + exchange buckets
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import N_ROWS, emit, gen_keys
+from repro.core import ticketing as tk
+from repro.core import updates as up
+
+
+def account(card: str, n: int, workers: int) -> dict[str, float]:
+    uniq = {"low": 1000, "high": n // 10, "unique": n}[card]
+    cap = 1 << (2 * uniq - 1).bit_length()
+    table = cap * (4 + 4) + uniq * 4  # keys + tickets + key_by_ticket
+    acc = uniq * 4
+    atomic = table + acc
+    thread_local = table + workers * acc
+    preagg_cap = 4096
+    preagg = workers * preagg_cap * (4 + 4 + 4)
+    spill = workers * (n // workers) * (4 + 4)  # worst-case raw spill rows
+    buckets = 2 * n * (4 + 4)  # partition buckets (2× slack)
+    partitioned = preagg + spill + buckets
+    return {
+        "atomic": atomic,
+        "thread_local": thread_local,
+        "partitioned": partitioned,
+    }
+
+
+def run(n=None):
+    n = n or min(N_ROWS, 1 << 20)
+    # verify accounting at the base case with real buffers
+    uniq = 1000
+    cap = 2048
+    t = tk.make_table(cap, max_groups=uniq)
+    real = t.keys.nbytes + t.tickets.nbytes + t.key_by_ticket.nbytes + up.init_acc(uniq, "sum").nbytes
+    est = account("low", n, 1)["atomic"]
+    assert abs(real - est) / est < 0.1, (real, est)
+
+    for card in ["low", "high", "unique"]:
+        for workers in [1, 8, 32]:
+            a = account(card, n, workers)
+            for method, bytes_ in a.items():
+                emit(
+                    f"table3_{method}_{card}_k{workers}",
+                    0.0,
+                    f"GB={bytes_/2**30:.4f}",
+                )
+
+
+if __name__ == "__main__":
+    run()

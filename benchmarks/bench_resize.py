@@ -1,0 +1,60 @@
+"""Paper Fig. 8 — impact of one forced resize (half-capacity start).
+
+The concurrent table starts at half the required capacity and migrates once
+mid-stream (Maier-style ticket-preserving relocation); partitioned
+pre-aggregation is resize-free by construction (fixed-size local tables,
+spill on overflow) so its line is flat — matching the paper's finding that
+resizing is a concurrent-side risk."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import N_ROWS, emit, gen_keys, time_fn
+from repro.core import migrate, partitioned_groupby
+from repro.core import ticketing as tk
+from repro.core import updates as up
+
+
+def concurrent_with_resize(keys, uniq, *, undersized: bool):
+    cap_full = 1 << (2 * uniq - 1).bit_length()
+    cap = cap_full // 2 if undersized else cap_full
+    half = keys.shape[0] // 2
+
+    @jax.jit
+    def run(keys):
+        table = tk.make_table(cap, max_groups=uniq)
+        acc = up.init_acc(uniq, "count")
+        t1, table = tk.get_or_insert(table, keys[:half])
+        acc = up.scatter_update(acc, t1, jnp.ones((half,), jnp.float32), kind="count")
+        if undersized:
+            table = migrate(table, cap_full)  # forced mid-stream resize
+        t2, table = tk.get_or_insert(table, keys[half:])
+        acc = up.scatter_update(acc, t2, jnp.ones((half,), jnp.float32), kind="count")
+        return acc, table.count
+
+    return run
+
+
+def run(n=None):
+    n = n or min(N_ROWS, 1 << 19)
+    for card in ["high", "unique"]:
+        keys = jnp.asarray(gen_keys(n, card, "uniform"))
+        uniq = {"high": n // 10, "unique": n}[card]
+        us_ok = time_fn(concurrent_with_resize(keys, uniq, undersized=False), keys)
+        us_rs = time_fn(concurrent_with_resize(keys, uniq, undersized=True), keys)
+        emit(f"fig8_concurrent_sized_{card}", us_ok, f"n={n}")
+        emit(
+            f"fig8_concurrent_resized_{card}", us_rs,
+            f"n={n};degradation={us_rs/us_ok:.2f}x",
+        )
+        us_p = time_fn(
+            lambda k: partitioned_groupby(k, None, kind="count", max_groups=uniq,
+                                          num_workers=8, preagg_capacity=2048).values,
+            keys,
+        )
+        emit(f"fig8_partitioned_{card}", us_p, "resize-free by construction")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""§Roofline — emit the per-(arch × shape × mesh) roofline table from the
+dry-run artifacts in experiments/dryrun/*.json (single-pod rows)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import REPO, emit
+
+
+def run():
+    paths = sorted(glob.glob(os.path.join(REPO, "experiments/dryrun/*_16x16.json")))
+    if not paths:
+        emit("roofline_missing", -1.0, "run: python -m repro.launch.dryrun --all")
+        return
+    for p in paths:
+        with open(p) as f:
+            d = json.load(f)
+        r = d["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom else 0.0
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}",
+            dom * 1e6,  # dominant term in µs
+            (
+                f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+                f"collective_s={r['collective_s']:.3e};bottleneck={r['bottleneck']};"
+                f"roofline_frac={frac:.3f};useful_flops={r['useful_flops_frac']:.3f}"
+            ),
+        )
+
+
+if __name__ == "__main__":
+    run()

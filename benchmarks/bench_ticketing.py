@@ -1,0 +1,85 @@
+"""Paper Fig. 4 — ticketing hash-table designs × cardinality × skew.
+
+Designs (TPU-native counterparts of the paper's table zoo):
+  folklore_star : linear-probe claim-protocol table (the paper's winner)
+  sort          : sort-based ticketing (no table; the dense-TPU strawman)
+  direct        : perfect-hash / bounded-domain (paper §3.1 discussion)
+  multi_block   : radix-split tables (iceberg-flavoured two-level analogue)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import N_ROWS, emit, gen_keys, time_fn
+from repro.core import ticketing as tk
+from repro.core.hashing import slot_hash, EMPTY_KEY
+
+
+def _cap(uniq):
+    return 1 << max((2 * uniq - 1).bit_length(), 4)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "max_groups"))
+def folklore_star(keys, *, capacity, max_groups):
+    table = tk.make_table(capacity, max_groups=max_groups)
+    tickets, table = tk.get_or_insert(table, keys)
+    return tickets
+
+
+@jax.jit
+def sort_based(keys):
+    return tk.sort_ticketing(keys)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("domain",))
+def direct(keys, *, domain):
+    return tk.direct_ticketing(keys, domain)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("blocks", "capacity", "max_groups"))
+def multi_block(keys, *, blocks, capacity, max_groups):
+    """Radix-split: each block is an independent claim-protocol table (all
+    functional, single fused jit — models the per-VMEM-block kernel)."""
+    bid = slot_hash(keys, blocks, seed=13)
+    out = jnp.full(keys.shape, -1, jnp.int32)
+    for b in range(blocks):
+        kb = jnp.where(bid == b, keys, EMPTY_KEY)
+        table = tk.make_table(capacity, max_groups=max_groups)
+        tb, _ = tk.get_or_insert(table, kb)
+        out = jnp.where(bid == b, tb + b * max_groups, out)
+    return out
+
+
+def run(n=None):
+    n = n or min(N_ROWS, 1 << 19)
+    for card in ["low", "high", "unique"]:
+        for dist in ["uniform", "zipf", "heavy"]:
+            if card == "low" and dist != "uniform":
+                continue  # paper applies skew to high-card datasets
+            keys = jnp.asarray(gen_keys(n, card, dist))
+            uniq = {"low": 1000, "high": n // 10, "unique": n}[card]
+            cap = _cap(uniq)
+            tag = f"{card}_{dist}"
+            us = time_fn(
+                lambda k: folklore_star(k, capacity=cap, max_groups=cap // 2), keys
+            )
+            emit(f"fig4_folklore_{tag}", us, f"n={n};Mrows/s={n/us:.1f}")
+            us = time_fn(sort_based, keys)
+            emit(f"fig4_sort_{tag}", us, f"n={n};Mrows/s={n/us:.1f}")
+            if card != "unique":
+                us = time_fn(lambda k: direct(k, domain=uniq), keys)
+                emit(f"fig4_direct_{tag}", us, f"n={n};Mrows/s={n/us:.1f}")
+            us = time_fn(
+                lambda k: multi_block(
+                    k, blocks=4, capacity=max(cap // 4, 16), max_groups=max(cap // 8, 8)
+                ),
+                keys,
+            )
+            emit(f"fig4_multiblock_{tag}", us, f"n={n};Mrows/s={n/us:.1f}")
+
+
+if __name__ == "__main__":
+    run()

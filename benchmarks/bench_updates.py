@@ -1,0 +1,52 @@
+"""Paper Fig. 5 — partial-aggregate update methods in isolation.
+
+Keys are integers in [0, K) used directly as tickets (the paper's perfect-
+hash isolation setup).  Methods: scatter (atomic analogue), onehot (MXU),
+sort_segment (in-core partitioned analogue), serialized (locking analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import N_ROWS, emit, gen_keys, time_fn
+from repro.core import updates as up
+
+
+def run(n=None):
+    n = n or min(N_ROWS, 1 << 20)
+    vals = jnp.asarray(jax.random.normal(jax.random.PRNGKey(0), (n,)))
+    for card in ["low", "high", "unique"]:
+        for dist in ["uniform", "zipf", "heavy"]:
+            if card == "low" and dist != "uniform":
+                continue
+            if card == "unique" and dist != "uniform":
+                continue
+            keys = gen_keys(n, card, dist)
+            uniq = {"low": 1000, "high": n // 10, "unique": n}[card]
+            tickets = jnp.asarray(keys.astype("int32"))
+            tag = f"{card}_{dist}"
+            for strat in ["scatter", "onehot", "sort_segment", "serialized"]:
+                if strat == "onehot" and uniq > 4096:
+                    continue  # O(K·G) — only sensible at low cardinality
+                if strat == "serialized" and n > (1 << 16):
+                    tickets_s = tickets[: 1 << 16]
+                    vals_s = vals[: 1 << 16]
+                    nn = 1 << 16
+                else:
+                    tickets_s, vals_s, nn = tickets, vals, n
+                fn = functools.partial(
+                    jax.jit(
+                        lambda t, v: up.get_update_fn(strat)(
+                            up.init_acc(uniq, "sum"), t, v, kind="sum"
+                        )
+                    )
+                )
+                us = time_fn(fn, tickets_s, vals_s)
+                emit(f"fig5_{strat}_{tag}", us, f"n={nn};Mrows/s={nn/us:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,77 @@
+"""Generate EXPERIMENTS.md tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
+
+Prints markdown: §Dry-run (memory + collectives per cell, both meshes) and
+§Roofline (three terms, bottleneck, useful-flops fraction — single-pod).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_):
+    cells = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "—"
+    return f"{b/2**30:.2f}"
+
+
+def dryrun_table(cells):
+    print("| arch | shape | mesh | mode | compile s | peak GiB/dev | HLO flops/dev | coll B/dev | a2a B | ag B | ar B | rs B |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        r = c["roofline"]
+        co = c["collectives"]
+        print(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {c['mode']} "
+            f"| {c['compile_s']} | {fmt_bytes(c['memory']['peak_bytes'])} "
+            f"| {r['hlo_flops']:.2e} | {r['coll_bytes']:.2e} "
+            f"| {co.get('all-to-all', 0):.1e} | {co.get('all-gather', 0):.1e} "
+            f"| {co.get('all-reduce', 0):.1e} | {co.get('reduce-scatter', 0):.1e} |"
+        )
+
+
+def roofline_table(cells):
+    print("| arch | shape | compute s | memory s | collective s | bottleneck | model GFLOPs/chip | useful-flops frac | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c["mesh"] != "16x16":
+            continue
+        r = c["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / dom if dom > 0 else 0.0
+        print(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['bottleneck']}** "
+            f"| {r['model_flops']/r['chips']/1e9:.1f} | {r['useful_flops_frac']:.3f} | {frac:.3f} |"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--section", default="both", choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    cells = load(args.dir)
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run cells\n")
+        dryrun_table(cells)
+        print()
+    if args.section in ("roofline", "both"):
+        print("### Roofline (single-pod 16×16, 256 chips)\n")
+        roofline_table(cells)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end training driver: train a small LM for a few hundred steps.
+
+The model uses the paper's technique as a first-class feature: embedding
+gradients aggregate through TICKETED group-by (dedup → dense segment-sum →
+one scatter), and the data pipeline maintains streaming token-frequency
+GROUP BY statistics.
+
+Run (CPU-sized default, ~2 min):
+  PYTHONPATH=src python examples/train_lm.py --steps 300
+Run the ~100M preset (needs real hardware or patience):
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.train.loop import TrainHParams, train_loop
+
+
+def preset_cfg(name: str):
+    base = get_config("qwen3_0_6b")
+    if name == "100m":
+        # ~100M params: 12L × d768 × ffn 2304, vocab 50k
+        return dataclasses.replace(
+            base, name="repro-100m", n_layers=12, d_model=768, n_heads=12,
+            n_kv_heads=4, head_dim=64, d_ff=2304, vocab_size=50_304,
+        )
+    return get_config("qwen3_0_6b", reduced=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    args = ap.parse_args()
+
+    cfg = preset_cfg(args.preset)
+    hp = TrainHParams(peak_lr=1e-3, warmup=20, total_steps=args.steps,
+                      ticketed_embedding=True)
+    mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq, track_stats=True)
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+
+    params, opt, hist = train_loop(
+        mesh, cfg, hp, iter(data), steps=args.steps,
+        checkpoint_manager=mgr, checkpoint_every=100, log_every=10,
+    )
+    mgr.wait()
+    toks, counts = data.token_stats()
+    top = counts.argsort()[::-1][:5]
+    print("\nstreaming GROUP BY token stats (top-5 heavy hitters):")
+    for i in top:
+        print(f"  token {int(toks[i]):6d}  count {int(counts[i])}")
+    print(f"\nfinal loss: {hist[-1]['loss']:.4f} (from {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

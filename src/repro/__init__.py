@@ -1,0 +1,7 @@
+"""repro: Global Hash Tables Strike Back! on JAX/TPU.
+
+Paper: Xue & Marcus, 2025 — fully concurrent GROUP BY aggregation with a
+purpose-built global hash table (ticketing + dense partial aggregates),
+reproduced as a TPU-native framework feature. See DESIGN.md.
+"""
+__version__ = "1.0.0"

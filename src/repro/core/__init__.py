@@ -1,0 +1,63 @@
+"""Core library: the paper's fully concurrent GROUP BY aggregation, TPU-native.
+
+Public API:
+  concurrent_groupby      — end-to-end ticket→update→materialize (single core)
+  partitioned_groupby     — Leis-style baseline (single core, vmapped workers)
+  concurrent_groupby_sharded / partitioned_groupby_sharded — mesh versions
+  TicketTable / get_or_insert / lookup — the Folklore*-analogue hash table
+  choose_plan             — paper-guided adaptive strategy selection
+"""
+from repro.core.aggregation import GroupByResult, concurrent_groupby, groupby_oracle
+from repro.core.adaptive import Plan, WorkloadStats, choose_plan, sample_stats
+from repro.core.hashing import EMPTY_KEY
+from repro.core.hybrid import detect_heavy_hitters, hybrid_groupby
+from repro.core.partitioned import partitioned_groupby
+from repro.core.resize import maybe_resize, migrate
+from repro.core.ticketing import (
+    TicketTable,
+    direct_ticketing,
+    get_or_insert,
+    lookup,
+    make_table,
+    sort_ticketing,
+)
+from repro.core.updates import (
+    UPDATE_FNS,
+    finalize,
+    get_update_fn,
+    init_acc,
+    onehot_update,
+    scatter_update,
+    serialized_update,
+    sort_segment_update,
+)
+
+__all__ = [
+    "GroupByResult",
+    "concurrent_groupby",
+    "groupby_oracle",
+    "Plan",
+    "WorkloadStats",
+    "choose_plan",
+    "sample_stats",
+    "EMPTY_KEY",
+    "detect_heavy_hitters",
+    "hybrid_groupby",
+    "partitioned_groupby",
+    "TicketTable",
+    "direct_ticketing",
+    "get_or_insert",
+    "lookup",
+    "make_table",
+    "sort_ticketing",
+    "maybe_resize",
+    "migrate",
+    "UPDATE_FNS",
+    "finalize",
+    "get_update_fn",
+    "init_acc",
+    "onehot_update",
+    "scatter_update",
+    "serialized_update",
+    "sort_segment_update",
+]

@@ -1,0 +1,136 @@
+"""End-to-end fully concurrent group aggregation (paper §2.3, Fig. 2).
+
+Combines the two stages — ticketing (§3.1) and partial-aggregate update
+(§3.2) — plus materialization, in the morsel-at-a-time style of the paper's
+execution model: ticket an entire morsel, then aggregate that morsel.
+
+The public entry point is :func:`concurrent_groupby`.  It is jit-friendly
+(static shapes; the number of morsels is a static unroll via
+``jax.lax.scan``), and every stage strategy is pluggable so the benchmark
+harness can sweep the design space exactly as the paper does.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ticketing as tk
+from repro.core import updates as up
+from repro.core.hashing import EMPTY_KEY
+
+
+class GroupByResult(NamedTuple):
+    keys: jnp.ndarray        # (max_groups,) uint32, EMPTY_KEY beyond num_groups
+    values: jnp.ndarray      # (max_groups,) or (max_groups, V) aggregates
+    num_groups: jnp.ndarray  # () int32
+
+
+def _round_up_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kind",
+        "update",
+        "max_groups",
+        "morsel_size",
+        "ticketing",
+        "capacity",
+    ),
+)
+def concurrent_groupby(
+    keys: jnp.ndarray,
+    values: jnp.ndarray | None = None,
+    *,
+    kind: str = "count",
+    update: str = "scatter",
+    max_groups: int,
+    morsel_size: int | None = None,
+    ticketing: str = "hash",
+    capacity: int | None = None,
+) -> GroupByResult:
+    """GROUP BY keys AGGREGATE(kind) OVER values, fully concurrently.
+
+    Args:
+      keys: (N,) uint32/int key column. EMPTY_KEY rows are ignored (morsel
+        padding).
+      values: (N,) value column; ignored for kind="count".
+      kind: sum | count | min | max.
+      update: scatter | onehot | sort_segment | serialized (§3.2 strategies).
+      max_groups: static bound on the number of unique keys (the paper's
+        "perfect cardinality estimate" assumption; resize.py handles the
+        misestimated case).
+      morsel_size: rows per morsel. None → single morsel (whole column).
+      ticketing: hash (Folklore* analogue) | sort | direct.
+      capacity: hash-table slots; default 2× max_groups rounded to pow2.
+
+    Returns GroupByResult with keys in ticket order and the aggregate vector.
+    """
+    keys = keys.reshape(-1).astype(jnp.uint32)
+    n = keys.shape[0]
+    if values is None:
+        values = jnp.ones((n,), jnp.float32)
+    values = values.reshape(n, -1) if values.ndim > 1 else values.reshape(-1)
+    acc_width = None if values.ndim == 1 else values.shape[1]
+
+    if capacity is None:
+        capacity = _round_up_pow2(max(2 * max_groups, 16))
+    update_fn = up.get_update_fn(update)
+    acc = up.init_acc(max_groups, kind, width=acc_width)
+
+    if ticketing == "sort":
+        tickets, key_by_ticket, count = tk.sort_ticketing(keys)
+        key_by_ticket = key_by_ticket[:max_groups]
+        acc = update_fn(acc, tickets, values, kind=kind)
+        return GroupByResult(key_by_ticket, up.finalize(kind, acc), count)
+
+    if ticketing == "direct":
+        tickets, key_by_ticket, count = tk.direct_ticketing(keys, max_groups)
+        acc = update_fn(acc, tickets, values, kind=kind)
+        nnz = jnp.sum((up.init_acc(max_groups, "count").at[tickets].add(1.0) > 0))
+        return GroupByResult(key_by_ticket, up.finalize(kind, acc), count)
+
+    assert ticketing == "hash", ticketing
+    table = tk.make_table(capacity, max_groups=max_groups)
+
+    if morsel_size is None or morsel_size >= n:
+        tickets, table = tk.get_or_insert(table, keys)
+        acc = update_fn(acc, tickets, values, kind=kind)
+    else:
+        assert n % morsel_size == 0, "pad the column to a morsel multiple"
+        km = keys.reshape(-1, morsel_size)
+        vm = values.reshape(-1, morsel_size, *values.shape[1:])
+
+        def step(carry, morsel):
+            table, acc = carry
+            mk, mv = morsel
+            tickets, table = tk.get_or_insert(table, mk)
+            acc = update_fn(acc, tickets, mv, kind=kind)
+            return (table, acc), None
+
+        (table, acc), _ = jax.lax.scan(step, (table, acc), (km, vm))
+
+    return GroupByResult(table.key_by_ticket, up.finalize(kind, acc), table.count)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "max_groups"))
+def groupby_oracle(keys, values=None, *, kind="count", max_groups: int):
+    """Sorted-group-by oracle used by tests: independent of all the machinery
+    above (sort keys, segment-reduce), results in first-appearance order are
+    NOT guaranteed — callers compare as key→value maps."""
+    keys = keys.reshape(-1).astype(jnp.uint32)
+    n = keys.shape[0]
+    if values is None:
+        values = jnp.ones((n,), jnp.float32)
+    tickets, key_by_ticket, count = tk.sort_ticketing(keys)
+    acc = up.init_acc(max_groups, kind)
+    acc = up.sort_segment_update(acc, tickets, values, kind=kind)
+    return GroupByResult(key_by_ticket[:max_groups], up.finalize(kind, acc), count)

@@ -1,0 +1,211 @@
+"""Distributed group aggregation over a device mesh (paper "threads" ⇒ devices).
+
+Two strategies, mirroring the paper's central comparison at mesh scale:
+
+* :func:`concurrent_groupby_sharded` — the **fully concurrent / thread-local**
+  analogue.  Every device runs the single-core concurrent pipeline (ticket →
+  dense update) over its shard of the rows, producing a dense ticket-indexed
+  partial-aggregate vector *keyed identically across devices* (the global
+  key→ticket map is made consistent by ticketing against a shared key-space
+  hash: slot position IS the ticket — a "global hash table" whose slots are
+  replicated and whose merge is additive).  The end merge is ONE
+  ``psum``/``reduce_scatter`` over a dense vector — the paper's "trivially
+  parallel, cache-efficient" merge (§3.2) becomes a single all-reduce, the
+  literal transpose of partitioning's all_to_all.
+
+* :func:`partitioned_groupby_sharded` — the Leis baseline: local pre-agg,
+  radix partition by key hash, ``all_to_all`` exchange, final local agg.
+
+Consistency note (honest adaptation): CPU threads share one mutating table —
+tickets are assigned first-come by CAS.  Devices cannot share memory, so the
+concurrent strategy establishes the global key→ticket map with a **union
+build**: each device tickets its rows locally, all-gathers the per-device
+*unique key lists* (tiny: bounded by cardinality, not rows — this is the
+crucial asymmetry the paper's indirection buys us), and then every device
+deterministically replays the concatenated key lists into its own copy of
+the "global" table.  Determinism of the replay order (device-rank order) is
+the TPU analogue of CAS winner arbitration: every device computes the *same*
+table, so ticket-indexed dense vectors are commonly indexed across the mesh
+and the merge is one ``psum`` — the paper's "all vectors are in the same
+(ticket) order ⇒ merge is trivially parallel and cache efficient" (§3.2),
+made literal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import ticketing as tk
+from repro.core import updates as up
+from repro.core.aggregation import GroupByResult
+from repro.core.hashing import EMPTY_KEY, slot_hash
+from repro.core.partitioned import make_preagg, preagg_morsel
+
+
+def concurrent_groupby_sharded(
+    mesh,
+    keys,
+    values=None,
+    *,
+    kind: str = "count",
+    max_groups: int,
+    axis: str = "data",
+    max_local_groups: int | None = None,
+    update: str = "scatter",
+):
+    """Fully concurrent aggregation across the mesh ``axis``.
+
+    keys/values are sharded over ``axis`` on dim 0.  Protocol (thread-local
+    method of §3.2 at mesh scale):
+
+      1. local ticketing + dense update over the shard's rows;
+      2. all-gather per-device unique key lists (≤ max_local_groups keys —
+         cardinality-bounded, NOT row-bounded);
+      3. deterministic union replay → identical global table everywhere;
+      4. translate local tickets to global tickets (one gather);
+      5. dense ``psum`` of ticket-indexed partial vectors == the merge.
+    """
+    if max_local_groups is None:
+        max_local_groups = max_groups
+    cap_local = 16
+    while cap_local < 2 * max_local_groups:
+        cap_local *= 2
+    cap_global = 16
+    while cap_global < 2 * max_groups:
+        cap_global *= 2
+
+    update_fn = up.get_update_fn(update)
+
+    def local(kk, vv):
+        kk = kk.reshape(-1)
+        vv = vv.reshape(-1)
+        # (1) local ticketing + local dense partial aggregates
+        ltickets, ltable = tk.get_or_insert(
+            tk.make_table(cap_local, max_groups=max_local_groups), kk
+        )
+        lacc = up.init_acc(max_local_groups, kind)
+        lacc = update_fn(lacc, ltickets, vv, kind=kind)
+        # (2) exchange unique keys only (the paper's indirection payoff:
+        #     the communicated state is O(cardinality), rows never move)
+        local_keys = ltable.key_by_ticket  # (max_local_groups,) ticket order
+        all_keys = jax.lax.all_gather(local_keys, axis, tiled=True)
+        # (3) deterministic union replay — same table on every device
+        gtickets_of_all, gtable = tk.get_or_insert(
+            tk.make_table(cap_global, max_groups=max_groups), all_keys
+        )
+        # (4) my keys sit at rank*max_local_groups in the gathered list
+        rank = jax.lax.axis_index(axis)
+        mine = jax.lax.dynamic_slice_in_dim(
+            gtickets_of_all, rank * max_local_groups, max_local_groups
+        )
+        # (5) re-index local partials into global ticket space, then psum
+        gacc = up.init_acc(max_groups, kind)
+        merge_kind = {"count": "sum", "sum": "sum", "min": "min", "max": "max"}[kind]
+        gacc = up.scatter_update(gacc, mine, lacc, kind=merge_kind)
+        if merge_kind == "sum":
+            gacc = jax.lax.psum(gacc, axis)
+        elif merge_kind == "min":
+            gacc = -jax.lax.pmax(-gacc, axis)
+        else:
+            gacc = jax.lax.pmax(gacc, axis)
+        return gacc, gtable.key_by_ticket, gtable.count
+
+    vals = values if values is not None else jnp.ones_like(keys, dtype=jnp.float32)
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(), P(), P()),
+        check_vma=False,  # while_loop carries start replicated (fresh table)
+    )
+    gacc, key_by_ticket, count = fn(keys, vals)
+    return GroupByResult(key_by_ticket, up.finalize(kind, gacc), count)
+
+
+def partitioned_groupby_sharded(
+    mesh,
+    keys,
+    values=None,
+    *,
+    kind: str = "count",
+    max_groups: int,
+    axis: str = "data",
+    preagg_capacity: int = 4096,
+    partition_capacity: int | None = None,
+):
+    """Leis-style partitioned aggregation across the mesh ``axis`` with a
+    real all_to_all exchange.
+
+    Per device: morsel-vectorized pre-aggregation into a fixed table, spills
+    kept raw; entries+spills are bucketed by partition id (hash >> bits) into
+    fixed-size per-partition buckets; ``all_to_all`` delivers each partition
+    to its owner; owners finish with a sort-segment aggregation of their
+    partitions.  Bucket overflow (static shapes!) drops are prevented by
+    sizing ``partition_capacity`` ≥ 2× expected per-partition load; the
+    overflow count is returned so callers/tests can assert it is zero.
+    """
+    ndev = mesh.shape[axis]
+
+    def local(kk, vv):
+        kk = kk.reshape(-1)
+        vv = vv.reshape(-1)
+        st = make_preagg(preagg_capacity, kind)
+        st, spill = preagg_morsel(st, kk, vv, kind)
+        # rows to exchange: preagg entries + spilled raw rows
+        ek, ev, ec = st.keys, st.vals, st.cnts
+        sk = jnp.where(spill, kk, EMPTY_KEY)
+        if kind == "count":
+            sv = jnp.where(spill, 1.0, 0.0)
+        elif kind == "sum":
+            sv = jnp.where(spill, vv, 0.0)
+        else:
+            sv = jnp.where(spill, vv, up.neutral(kind))
+        allk = jnp.concatenate([ek, sk])
+        allv = jnp.concatenate([ev, sv])
+
+        # partition id by high hash bits (radix partition)
+        pid = (slot_hash(allk, ndev, seed=7)).astype(jnp.int32)
+        pid = jnp.where(allk == EMPTY_KEY, ndev, pid)
+
+        cap = partition_capacity or (2 * allk.shape[0] // ndev)
+        # stable bucket packing: sort by pid, then slice fixed buckets
+        order = jnp.argsort(pid, stable=True)
+        pk, pv, pp = (jnp.take(x, order) for x in (allk, allv, pid))
+        # position within partition
+        pos = jnp.arange(pk.shape[0]) - jnp.searchsorted(pp, pp, side="left")
+        overflow = jnp.sum((pos >= cap) & (pp < ndev))
+        dest = jnp.where((pos < cap) & (pp < ndev), pp * cap + pos, ndev * cap)
+        bk = jnp.full((ndev * cap + 1,), EMPTY_KEY, jnp.uint32).at[dest].set(pk)[:-1]
+        bv = jnp.full((ndev * cap + 1,), up.neutral(kind), jnp.float32).at[dest].set(pv)[:-1]
+        bk = bk.reshape(ndev, cap)
+        bv = bv.reshape(ndev, cap)
+        # the exchange
+        xk = jax.lax.all_to_all(bk, axis, split_axis=0, concat_axis=0, tiled=False)
+        xv = jax.lax.all_to_all(bv, axis, split_axis=0, concat_axis=0, tiled=False)
+        xk = xk.reshape(-1)
+        xv = xv.reshape(-1)
+        # final partition-wise aggregation (owner side)
+        tickets, key_by_ticket, cnt = tk.sort_ticketing(xk)
+        acc = up.init_acc(max_groups, kind)
+        merge_kind = {"count": "sum", "sum": "sum", "min": "min", "max": "max"}[kind]
+        acc = up.sort_segment_update(acc, tickets, xv, kind=merge_kind)
+        return (
+            key_by_ticket[:max_groups],
+            up.finalize(kind, acc),
+            cnt.reshape(1),
+            overflow.reshape(1).astype(jnp.int32),
+        )
+
+    vals = values if values is not None else jnp.ones_like(keys, dtype=jnp.float32)
+    fn = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis)),
+        check_vma=False,
+    )
+    keys_p, vals_p, counts_p, overflow_p = fn(keys, vals)
+    return keys_p, vals_p, counts_p, overflow_p

@@ -1,0 +1,80 @@
+"""Hash functions for ticketing.
+
+The paper's ticketing hash table (§3.1) needs a fast, well-mixing integer
+hash.  We provide the standard finalizer-style mixers used by analytic
+engines (murmur3 fmix, xxhash-style avalanche, multiply-shift) as pure
+jnp functions operating on uint32/uint64 vectors, so they vectorize on the
+VPU and are usable both inside Pallas kernels and in plain jitted code.
+
+All functions take and return unsigned integer arrays and are stateless.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Sentinel used throughout the ticketing machinery.  Ticket value 0 is
+# reserved as the "empty" sentinel exactly as in the paper's Folklore*
+# design, and EMPTY_KEY is the corresponding reserved key.
+EMPTY_KEY = jnp.uint32(0xFFFFFFFF)
+EMPTY_TICKET = 0
+
+
+def murmur3_fmix32(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 32-bit finalizer. Full-avalanche mixer for uint32 keys."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def murmur3_fmix64(x: jnp.ndarray) -> jnp.ndarray:
+    """Murmur3 64-bit finalizer (requires x64 mode for uint64)."""
+    x = x.astype(jnp.uint64)
+    x = x ^ (x >> 33)
+    x = x * jnp.uint64(0xFF51AFD7ED558CCD)
+    x = x ^ (x >> 33)
+    x = x * jnp.uint64(0xC4CEB9FE1A85EC53)
+    x = x ^ (x >> 33)
+    return x
+
+
+def xxhash32_mix(x: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
+    """xxhash32-style avalanche over uint32 with a seed (for rehash on resize
+    or for independent hash families in multi-level tables)."""
+    x = x.astype(jnp.uint32) + jnp.uint32(seed) * jnp.uint32(0x9E3779B1)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x85EBCA77)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE3D)
+    x = x ^ (x >> 16)
+    return x
+
+
+def multiply_shift(x: jnp.ndarray, log2_buckets: int, seed: int = 0) -> jnp.ndarray:
+    """Dietzfelbinger multiply-shift: cheapest universal-ish hash, returns a
+    bucket index in [0, 2**log2_buckets). One multiply + one shift — this is
+    what the VPU likes best and is our default in-kernel slot hash."""
+    a = jnp.uint32(0x9E3779B1 + 2 * seed + 1)  # odd constant
+    x = x.astype(jnp.uint32) * a
+    return (x >> jnp.uint32(32 - log2_buckets)).astype(jnp.int32)
+
+
+def slot_hash(keys: jnp.ndarray, table_size: int, seed: int = 0) -> jnp.ndarray:
+    """Map keys to initial probe slots of a power-of-two table.
+
+    Combines a full-avalanche mix with a mask; the mix guarantees linear
+    probing's cluster behaviour is independent of key structure (dense
+    integer key domains are common in our workloads — token ids, expert
+    ids — and un-mixed they would collide into runs).
+    """
+    assert table_size & (table_size - 1) == 0, "table_size must be a power of 2"
+    mixed = xxhash32_mix(keys, seed=seed)
+    return (mixed & jnp.uint32(table_size - 1)).astype(jnp.int32)
+
+
+def fingerprint(keys: jnp.ndarray) -> jnp.ndarray:
+    """16-bit fingerprint for two-level / iceberg-style designs."""
+    return (murmur3_fmix32(keys) >> 16).astype(jnp.uint32)

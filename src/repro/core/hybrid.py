@@ -1,0 +1,112 @@
+"""Hybrid aggregation — the paper's §6 future work, implemented.
+
+"We believe there is significant room for future work ... a system that can
+combine both atomic or locked updates with thread local updates could take
+advantage of the benefits of both" (§3.2 Discussion; cf. Cieslewicz & Ross
+[4], Fent & Neumann [7]).
+
+Design (TPU-native): a sample identifies ≤ ``num_registers`` heavy-hitter
+candidate keys.  Rows matching a heavy key accumulate into per-key DENSE
+REGISTERS via a masked reduction — on the VPU this is a handful of
+compare+select lanes per row, zero conflicts, the extreme case of the
+thread-local strategy (one "vector" per heavy key).  The remaining tail
+rows flow through the normal concurrent pipeline (ticket + scatter), which
+the heavy-hitter removal has just stripped of its only contention source.
+At the mesh level the registers merge with a psum; the tail merges as
+usual.
+
+This directly addresses the paper's worst corner (Table 2: unique keys +
+heavy hitters, 0.34×–0.48× at 32 threads): the register path absorbs the
+hitters, the tail becomes near-uniform.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ticketing as tk
+from repro.core import updates as up
+from repro.core.aggregation import GroupByResult
+from repro.core.hashing import EMPTY_KEY
+
+
+def detect_heavy_hitters(keys: jnp.ndarray, num_registers: int, sample: int = 8192):
+    """Host-side heavy-hitter candidates from a prefix sample (the engine's
+    optimizer stand-in; a real system would take them from statistics)."""
+    import numpy as np
+
+    flat = np.asarray(jax.device_get(keys.reshape(-1)[: sample]))
+    flat = flat[flat != np.uint32(0xFFFFFFFF)]
+    if flat.size == 0:
+        return np.full((num_registers,), 0xFFFFFFFF, np.uint32)
+    uniq, counts = np.unique(flat, return_counts=True)
+    order = np.argsort(counts)[::-1]
+    # only keys above 1% of the sample qualify as "heavy"
+    top = [int(uniq[i]) for i in order[:num_registers] if counts[i] > flat.size * 0.01]
+    out = np.full((num_registers,), 0xFFFFFFFF, np.uint32)
+    out[: len(top)] = top
+    return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "max_groups", "capacity")
+)
+def hybrid_groupby(
+    keys: jnp.ndarray,
+    values: jnp.ndarray | None,
+    heavy_keys: jnp.ndarray,  # (R,) uint32, EMPTY_KEY-padded
+    *,
+    kind: str = "count",
+    max_groups: int,
+    capacity: int | None = None,
+) -> GroupByResult:
+    keys = keys.reshape(-1).astype(jnp.uint32)
+    n = keys.shape[0]
+    if values is None:
+        values = jnp.ones((n,), jnp.float32)
+    values = values.reshape(-1).astype(jnp.float32)
+    r = heavy_keys.shape[0]
+
+    # ---- register path: masked dense reductions, zero conflicts ----------
+    is_heavy = keys[None, :] == heavy_keys[:, None]          # (R, N)
+    any_heavy = jnp.any(is_heavy, axis=0)
+    if kind == "count":
+        regs = jnp.sum(is_heavy.astype(jnp.float32), axis=1)
+    elif kind == "sum":
+        regs = jnp.sum(jnp.where(is_heavy, values[None, :], 0.0), axis=1)
+    elif kind == "min":
+        regs = jnp.min(jnp.where(is_heavy, values[None, :], jnp.inf), axis=1)
+    else:
+        regs = jnp.max(jnp.where(is_heavy, values[None, :], -jnp.inf), axis=1)
+
+    # ---- tail path: standard concurrent pipeline on the remaining rows ---
+    tail_keys = jnp.where(any_heavy, EMPTY_KEY, keys)
+    cap = capacity
+    if cap is None:
+        cap = 16
+        while cap < 2 * max_groups:
+            cap *= 2
+    table = tk.make_table(cap, max_groups=max_groups)
+    # pre-insert the heavy keys so they own the FIRST tickets (registers
+    # then merge by position — no search needed)
+    htickets, table = tk.get_or_insert(table, heavy_keys)
+    tickets, table = tk.get_or_insert(table, tail_keys)
+    acc = up.init_acc(max_groups, kind)
+    acc = up.scatter_update(acc, tickets, values, kind=kind)
+
+    # ---- merge registers into their (pre-assigned) ticket slots ----------
+    reg_t = jnp.where(htickets >= 0, htickets, max_groups)
+    if kind in ("sum", "count"):
+        acc = jnp.concatenate([acc, jnp.zeros((1,), jnp.float32)]).at[reg_t].add(regs)[:max_groups]
+    elif kind == "min":
+        acc = jnp.concatenate([acc, jnp.full((1,), jnp.inf)]).at[reg_t].min(regs)[:max_groups]
+    else:
+        acc = jnp.concatenate([acc, jnp.full((1,), -jnp.inf)]).at[reg_t].max(regs)[:max_groups]
+
+    # heavy keys with zero tail occurrences still occupy tickets — count
+    # stays correct because get_or_insert issued them; purely-absent
+    # register slots (padding) are EMPTY_KEY and get dropped by callers via
+    # key_by_ticket.
+    return GroupByResult(table.key_by_ticket, up.finalize(kind, acc), table.count)

@@ -1,0 +1,83 @@
+"""Hash-table resizing (paper §4.4).
+
+The paper forces exactly one resize by halving the initial capacity and
+adopts Maier et al.'s contention-less migration.  Functionally, migration of
+a ticketing table is even simpler than the general case: every stored key
+already owns an immutable ticket, so re-insertion into the bigger table is a
+pure relocation — no ticket counter is touched and no get-or-insert race can
+occur (keys are unique in the old table).  The key→ticket map is therefore
+preserved exactly (property-tested).
+
+Growth policy mirrors the paper: grow when live entries exceed
+``load_factor * capacity`` (default 0.5 — past that, linear probing's
+cluster lengths blow up).  ``maybe_resize`` is the jit-unfriendly host-side
+wrapper used by the engine between morsels; ``migrate`` itself is jittable
+for a fixed (old, new) capacity pair.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ticketing as tk
+from repro.core.hashing import EMPTY_KEY, slot_hash
+
+
+@functools.partial(jax.jit, static_argnames=("new_capacity",))
+def migrate(table: tk.TicketTable, new_capacity: int) -> tk.TicketTable:
+    """Relocate all (key, ticket) pairs into a table of ``new_capacity``.
+
+    Contention-less: every key is unique, so the scatter-min claim protocol
+    degenerates to pure linear probing with no retries across keys that
+    share a slot resolved by the vote — one vectorized pass over the old
+    table's live entries (bounded probe loop, same machinery as
+    get_or_insert but without ticket issuance).
+    """
+    assert new_capacity & (new_capacity - 1) == 0
+    live = table.tickets > 0
+    keys = jnp.where(live, table.keys, EMPTY_KEY)
+    old_tickets = table.tickets  # 1-based, 0 for dead rows
+
+    n = keys.shape[0]
+    lane = jnp.arange(n, dtype=jnp.int32)
+    mask = new_capacity - 1
+    slot = slot_hash(keys, new_capacity)
+    nk = jnp.full((new_capacity,), EMPTY_KEY, jnp.uint32)
+    nt = jnp.zeros((new_capacity,), jnp.int32)
+
+    def cond(state):
+        _, _, _, active = state
+        return jnp.any(active)
+
+    def body(state):
+        nk, nt, slot, active = state
+        probed = jnp.take(nt, slot)
+        empty = active & (probed == 0)
+        taken = active & (probed != 0)
+        slot2 = jnp.where(taken, (slot + 1) & mask, slot)
+        claim_slot = jnp.where(empty, slot, new_capacity)
+        claims = jnp.full((new_capacity + 1,), n, jnp.int32).at[claim_slot].min(lane)
+        won = empty & (jnp.take(claims, slot) == lane)
+        pub = jnp.where(won, slot, new_capacity)
+        nk = jnp.concatenate([nk, jnp.full((1,), EMPTY_KEY, jnp.uint32)]).at[pub].set(keys)[:new_capacity]
+        nt = jnp.concatenate([nt, jnp.zeros((1,), jnp.int32)]).at[pub].set(old_tickets)[:new_capacity]
+        return nk, nt, slot2, active & ~won
+
+    nk, nt, _, _ = jax.lax.while_loop(cond, body, (nk, nt, slot, live))
+    kbt = table.key_by_ticket
+    if kbt.shape[0] < new_capacity:
+        kbt = jnp.concatenate(
+            [kbt, jnp.full((new_capacity - kbt.shape[0],), EMPTY_KEY, jnp.uint32)]
+        )
+    return tk.TicketTable(nk, nt, kbt, table.count)
+
+
+def maybe_resize(table: tk.TicketTable, load_factor: float = 0.5) -> tk.TicketTable:
+    """Host-side growth check between morsels (the engine's insertion point
+    for resize, analogous to the paper pausing workers to migrate)."""
+    count = int(table.count)
+    if count > load_factor * table.capacity:
+        return migrate(table, 2 * table.capacity)
+    return table

@@ -1,0 +1,186 @@
+"""Partial-aggregate update strategies (paper §3.2).
+
+After ticketing, every row carries a dense ticket and the aggregation reduces
+to updating ``acc[ticket]`` with the row's value.  The paper studies three
+CPU strategies — atomic, fine-grained locking, thread-local+merge.  The TPU
+design space is different in kind, and we implement the full TPU-native set:
+
+  * ``scatter_update``   — XLA scatter-accumulate.  The closest analogue of
+    atomic updates: duplicate tickets serialize inside the scatter unit, so
+    heavy hitters cost extra passes (the TPU's version of contention).
+  * ``onehot_update``    — ``one_hot(tickets)ᵀ @ values`` on the **MXU**.
+    No CPU analogue: contention is converted into dense systolic work,
+    O(K·G) FLOPs but *completely* skew-immune.  Wins for small G (low
+    cardinality) where the matmul is cheap — exactly the regime where the
+    paper's atomic method collapses under heavy hitters (Fig. 5).
+  * ``sort_segment_update`` — sort rows by ticket then segment-reduce; the
+    in-core analogue of the *partitioned* approach (re-order, then
+    contention-free sequential aggregation).
+  * ``serialized_update`` — one row at a time via fori_loop; the honest
+    stand-in for fine-grained locking (documented in DESIGN.md as having no
+    true TPU analogue).  Reference/measurement only.
+
+The *thread-local + merge* strategy lives at the mesh level
+(``core/distributed.py``): each device keeps a dense local accumulator and
+the merge is a single ``psum`` — the paper's "trivially parallel, cache
+efficient" merge becomes one all-reduce on a dense vector.
+
+All update functions share the signature
+``update(acc, tickets, values) -> acc`` with ``acc: (G,) or (G, V)`` and
+rows with ticket < 0 ignored.  ``kind`` ∈ {sum, count, min, max} — mean is
+(sum, count) composed by the caller.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Kind = str  # "sum" | "count" | "min" | "max"
+
+_NEUTRAL = {
+    "sum": 0.0,
+    "count": 0.0,
+    "min": jnp.inf,
+    "max": -jnp.inf,
+}
+
+
+def neutral(kind: Kind, dtype=jnp.float32):
+    return jnp.asarray(_NEUTRAL[kind], dtype=dtype)
+
+
+def init_acc(num_groups: int, kind: Kind, dtype=jnp.float32, width: int | None = None):
+    shape = (num_groups,) if width is None else (num_groups, width)
+    return jnp.full(shape, neutral(kind, dtype), dtype=dtype)
+
+
+def _masked(tickets, values, kind, num_groups):
+    """Redirect invalid rows to a parking slot and neutralize their values."""
+    t = tickets.reshape(-1)
+    v = (
+        jnp.ones_like(t, dtype=jnp.float32)
+        if kind == "count"
+        else values.reshape(t.shape[0], -1) if values.ndim > tickets.ndim else values.reshape(-1)
+    )
+    ok = t >= 0
+    t = jnp.where(ok, t, num_groups)  # park row
+    if v.ndim > 1:
+        v = jnp.where(ok[:, None], v, neutral(kind, v.dtype))
+    else:
+        v = jnp.where(ok, v, neutral(kind, v.dtype))
+    return t, v
+
+
+def scatter_update(acc, tickets, values, kind: Kind = "sum"):
+    """Atomic-analogue: XLA scatter-accumulate into the dense vector."""
+    g = acc.shape[0]
+    t, v = _masked(tickets, values, kind, g)
+    pad = jnp.full((1, *acc.shape[1:]), neutral(kind, acc.dtype), acc.dtype)
+    wide = jnp.concatenate([acc, pad])
+    if kind in ("sum", "count"):
+        wide = wide.at[t].add(v.astype(acc.dtype))
+    elif kind == "min":
+        wide = wide.at[t].min(v.astype(acc.dtype))
+    elif kind == "max":
+        wide = wide.at[t].max(v.astype(acc.dtype))
+    else:
+        raise ValueError(kind)
+    return wide[:g]
+
+
+def onehot_update(acc, tickets, values, kind: Kind = "sum"):
+    """MXU path: contention → dense matmul. Sum/count only (min/max fall back
+    to a masked dense reduce, still MXU/VPU-friendly for small G)."""
+    g = acc.shape[0]
+    t, v = _masked(tickets, values, kind, g)
+    if kind in ("sum", "count"):
+        onehot = jax.nn.one_hot(t, g, dtype=acc.dtype)  # (K, G); parked→all-zero row
+        if v.ndim == 1:
+            return acc + onehot.T @ v.astype(acc.dtype)
+        return acc + onehot.T @ v.astype(acc.dtype)
+    # min/max: (K, G) masked broadcast reduce — O(K·G) memory-bounded; only
+    # sensible for small G, which is when this strategy is selected anyway.
+    sel = t[:, None] == jnp.arange(g)[None, :]
+    vv = v if v.ndim == 1 else v[:, 0]
+    dense = jnp.where(sel, vv[:, None].astype(acc.dtype), neutral(kind, acc.dtype))
+    red = jnp.min(dense, axis=0) if kind == "min" else jnp.max(dense, axis=0)
+    if kind == "min":
+        return jnp.minimum(acc, red)
+    return jnp.maximum(acc, red)
+
+
+def sort_segment_update(acc, tickets, values, kind: Kind = "sum"):
+    """Partitioned-analogue inside a core: sort rows by ticket, then a
+    contention-free segment reduction over the sorted runs."""
+    g = acc.shape[0]
+    t, v = _masked(tickets, values, kind, g)
+    order = jnp.argsort(t)
+    ts, vs = jnp.take(t, order), jnp.take(v, order, axis=0)
+    if kind in ("sum", "count"):
+        seg = jax.ops.segment_sum(vs.astype(acc.dtype), ts, num_segments=g + 1,
+                                  indices_are_sorted=True)
+    elif kind == "min":
+        seg = jax.ops.segment_min(vs.astype(acc.dtype), ts, num_segments=g + 1,
+                                  indices_are_sorted=True)
+    else:
+        seg = jax.ops.segment_max(vs.astype(acc.dtype), ts, num_segments=g + 1,
+                                  indices_are_sorted=True)
+    seg = seg[:g]
+    if kind in ("sum", "count"):
+        return acc + seg
+    # segment_min/max fill absent segments with +inf/-inf identities already.
+    return jnp.minimum(acc, seg) if kind == "min" else jnp.maximum(acc, seg)
+
+
+def serialized_update(acc, tickets, values, kind: Kind = "sum"):
+    """Fine-grained-locking stand-in: strictly sequential row-at-a-time
+    updates via fori_loop. Exists to quantify what full serialization costs
+    on TPU (paper Fig. 5's 'Locking' series)."""
+    g = acc.shape[0]
+    t, v = _masked(tickets, values, kind, g)
+    pad = jnp.full((1, *acc.shape[1:]), neutral(kind, acc.dtype), acc.dtype)
+    wide = jnp.concatenate([acc, pad])
+
+    def body(i, w):
+        ti = t[i]
+        vi = v[i].astype(acc.dtype)
+        if kind in ("sum", "count"):
+            return w.at[ti].add(vi)
+        if kind == "min":
+            return w.at[ti].min(vi)
+        return w.at[ti].max(vi)
+
+    wide = jax.lax.fori_loop(0, t.shape[0], body, wide)
+    return wide[:g]
+
+
+UPDATE_FNS: dict[str, Callable] = {
+    "scatter": scatter_update,
+    "onehot": onehot_update,
+    "sort_segment": sort_segment_update,
+    "serialized": serialized_update,
+}
+
+
+def get_update_fn(name: str) -> Callable:
+    try:
+        return UPDATE_FNS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown update strategy {name!r}; available: {sorted(UPDATE_FNS)}"
+        ) from None
+
+
+def finalize(kind: Kind, acc, count_acc=None):
+    """Materialize final aggregate values (paper's materialization stage):
+    replace untouched identities for min/max, compute mean from sum/count."""
+    if kind in ("min", "max"):
+        untouched = jnp.isinf(acc)
+        return jnp.where(untouched, jnp.nan, acc)
+    if kind == "mean":
+        assert count_acc is not None
+        return acc / jnp.maximum(count_acc, 1.0)
+    return acc

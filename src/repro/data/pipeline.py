@@ -1,0 +1,91 @@
+"""Data pipeline: sharded synthetic token streams + group-by statistics.
+
+The pipeline produces LM batches and, as a first-class feature, maintains
+**token-frequency statistics** via the paper's concurrent group-by engine —
+GROUP BY token_id COUNT(*) over every batch, aggregated morsel-at-a-time in
+the same ticket space across batches (the streaming use-case the fully
+concurrent model is built for: partitioned aggregation would have to
+re-exchange per batch).  These stats drive mixture re-weighting decisions
+and are exported to the metrics stream.
+
+Checkpointable: the iterator state is (epoch, position, rng), saved with
+the model checkpoint so restarts replay the exact stream.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import updates as up
+from repro.core import ticketing as tk
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class DataState:
+    seed: int
+    step: int = 0
+
+
+class SyntheticLM:
+    """Zipf-distributed synthetic token stream (matches the paper's skewed
+    workloads — heavy-hitter tokens are exactly what makes ticketed
+    embedding-gradient aggregation win)."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, seq: int, *, zipf_a: float = 1.2, seed: int = 0, track_stats: bool = True, stat_groups: int = 4096):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.zipf_a = zipf_a
+        self.state = DataState(seed=seed)
+        self.track_stats = track_stats
+        self.stat_groups = stat_groups
+        cap = 16
+        while cap < 2 * stat_groups:
+            cap *= 2
+        self._stats_table = tk.make_table(cap, max_groups=stat_groups)
+        self._stats_acc = up.init_acc(stat_groups, "count")
+
+    def _sample(self, rng: np.random.Generator):
+        z = rng.zipf(self.zipf_a, size=(self.batch, self.seq + 1)).astype(np.int64)
+        toks = (z - 1) % self.cfg.vocab_size
+        return toks.astype(np.int32)
+
+    def token_stats(self):
+        """(token_id, count) pairs accumulated so far — the streaming
+        GROUP BY materialization."""
+        n = int(self._stats_table.count)
+        return (
+            np.asarray(self._stats_table.key_by_ticket)[:n],
+            np.asarray(self._stats_acc)[:n],
+        )
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            rng = np.random.default_rng(self.state.seed + self.state.step)
+            toks = self._sample(rng)
+            self.state.step += 1
+            batch = {
+                "tokens": jnp.asarray(toks[:, :-1]),
+                "targets": jnp.asarray(toks[:, 1:]),
+            }
+            if self.cfg.frontend == "vision":
+                rngk = jax.random.PRNGKey(self.state.step)
+                batch["frontend_embeds"] = 0.02 * jax.random.normal(
+                    rngk, (self.batch, self.cfg.frontend_tokens, self.cfg.d_model)
+                )
+            if self.cfg.encoder_layers:
+                rngk = jax.random.PRNGKey(self.state.step)
+                batch["encoder_frames"] = 0.02 * jax.random.normal(
+                    rngk, (self.batch, self.seq, self.cfg.d_model)
+                )
+            if self.track_stats:
+                # streaming GROUP BY token COUNT via the concurrent engine
+                keys = batch["tokens"].reshape(-1).astype(jnp.uint32)
+                # bound the tracked key space: heavy hitters dominate Zipf
+                keys = jnp.where(keys < self.stat_groups // 2, keys, jnp.uint32(0xFFFFFFFF))
+                tickets, self._stats_table = tk.get_or_insert(self._stats_table, keys)
+                self._stats_acc = up.scatter_update(self._stats_acc, tickets, jnp.ones_like(keys, jnp.float32), kind="count")
+            yield batch

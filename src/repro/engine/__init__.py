@@ -1,0 +1,17 @@
+from repro.engine.columns import Table, combine_keys
+from repro.engine.groupby import AggSpec, GroupByOperator, groupby
+from repro.engine.morsels import DEFAULT_MORSEL_ROWS, pad_to_morsels
+from repro.engine.plans import Aggregate, Filter, Scan
+
+__all__ = [
+    "Table",
+    "combine_keys",
+    "AggSpec",
+    "GroupByOperator",
+    "groupby",
+    "DEFAULT_MORSEL_ROWS",
+    "pad_to_morsels",
+    "Aggregate",
+    "Filter",
+    "Scan",
+]

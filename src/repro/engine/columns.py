@@ -1,0 +1,50 @@
+"""Columnar data representation for the morsel-driven engine (paper §2.1).
+
+A ``Table`` is a dict of equal-length 1-D columns (jnp arrays).  Grouping
+keys of any width are canonicalized to a single uint32 hash-key column with
+``combine_keys`` (multi-column GROUP BY = hash-combine, the standard trick
+in vectorized engines; collisions across the 32-bit space are handled by
+verifying materialized keys when exact keys are required — here the engine
+also keeps the original columns so exact materialization is a gather).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Mapping
+
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY_KEY, murmur3_fmix32
+
+
+@dataclass
+class Table:
+    columns: dict[str, jnp.ndarray]
+
+    def __post_init__(self):
+        lens = {v.shape[0] for v in self.columns.values()}
+        assert len(lens) == 1, f"ragged columns: { {k: v.shape for k, v in self.columns.items()} }"
+
+    @property
+    def num_rows(self) -> int:
+        return next(iter(self.columns.values())).shape[0]
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def select(self, *names: str) -> "Table":
+        return Table({n: self.columns[n] for n in names})
+
+
+def combine_keys(*cols: jnp.ndarray) -> jnp.ndarray:
+    """Hash-combine multiple key columns into one uint32 key column.
+
+    Boost-style hash_combine chain; each column is avalanche-mixed first so
+    structured ints don't cancel.  Reserves EMPTY_KEY by remapping.
+    """
+    acc = jnp.zeros_like(cols[0], dtype=jnp.uint32)
+    for c in cols:
+        h = murmur3_fmix32(c.astype(jnp.uint32))
+        acc = acc ^ (h + jnp.uint32(0x9E3779B9) + (acc << 6) + (acc >> 2))
+    # keep the sentinel free
+    return jnp.where(acc == EMPTY_KEY, jnp.uint32(0x7FFFFFFF), acc)

@@ -1,0 +1,28 @@
+"""Morsel management (paper §2.1, Leis et al. [16]).
+
+Splits a column stream into fixed-size morsels (padding the tail with the
+EMPTY sentinel), the unit of vectorized execution throughout the engine and
+of the Pallas kernels' grid.  Dispatch order is host-controlled so the
+runtime can re-assign morsels (work stealing / straggler mitigation at the
+mesh level happens in train/elastic.py with the same mechanism).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hashing import EMPTY_KEY
+
+DEFAULT_MORSEL_ROWS = 4096
+
+
+def pad_to_morsels(keys: jnp.ndarray, values: jnp.ndarray | None, morsel_rows: int):
+    n = keys.shape[0]
+    rem = (-n) % morsel_rows
+    if rem:
+        keys = jnp.concatenate([keys, jnp.full((rem,), EMPTY_KEY, keys.dtype)])
+        if values is not None:
+            values = jnp.concatenate([values, jnp.zeros((rem,), values.dtype)])
+    num = keys.shape[0] // morsel_rows
+    k = keys.reshape(num, morsel_rows)
+    v = values.reshape(num, morsel_rows) if values is not None else None
+    return k, v, num

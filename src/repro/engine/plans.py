@@ -1,0 +1,61 @@
+"""Tiny push-based query plans over the morsel engine.
+
+Enough of a planner to express the paper's workload (scan → [filter] →
+group-by aggregate) and the framework's internal analytics (token stats,
+routing stats).  Operators are composed push-style: each chunk flows
+scan → filter → aggregate, mirroring morsel-driven pipelining.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from repro.engine.columns import Table
+from repro.engine.groupby import AggSpec, GroupByOperator
+
+
+@dataclass
+class Scan:
+    source: Table
+    chunk_rows: int = 1 << 16
+
+    def chunks(self):
+        n = self.source.num_rows
+        for start in range(0, n, self.chunk_rows):
+            end = min(start + self.chunk_rows, n)
+            yield Table({k: v[start:end] for k, v in self.source.columns.items()})
+
+
+@dataclass
+class Filter:
+    predicate: Callable[[Table], jnp.ndarray]  # rows -> bool mask
+
+    def apply(self, chunk: Table) -> Table:
+        # Morsel-friendly filtering: keep static shape, mask keys to EMPTY
+        # so downstream group-by ignores them (selection vectors, not
+        # compaction — the vectorized-engine idiom).
+        mask = self.predicate(chunk)
+        out = dict(chunk.columns)
+        out["__mask__"] = mask
+        return Table(out)
+
+
+@dataclass
+class Aggregate:
+    keys: Sequence[str]
+    aggs: Sequence[AggSpec]
+    max_groups: int
+    update: str = "scatter"
+
+    def run(self, plan_source: Scan, filt: Filter | None = None) -> Table:
+        op = GroupByOperator(
+            key_columns=list(self.keys), aggs=list(self.aggs),
+            max_groups=self.max_groups, update=self.update,
+        )
+        for chunk in plan_source.chunks():
+            if filt is not None:
+                chunk = filt.apply(chunk)  # adds __mask__; consume() handles it
+            op.consume(chunk)
+        return op.finalize()

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+ticket_hash — Folklore* GET_OR_INSERT (VMEM table, claim-protocol CAS
+  analogue, fuzzy ticketer), the paper's §3.1 contribution.
+segment_agg — dense partial-aggregate update (§3.2), scatter and one-hot
+  MXU strategies.
+
+ops.py: jitted public wrappers (auto interpret-mode off-TPU).
+ref.py: pure-jnp oracles; tests assert bit-identical tickets and allclose
+aggregates across shape/dtype sweeps.
+"""
+from repro.kernels.fused_groupby import fused_groupby_pallas
+from repro.kernels.ops import groupby_pallas, multi_block_ticket, segment_aggregate, ticket
+
+__all__ = ["fused_groupby_pallas", "groupby_pallas", "multi_block_ticket", "segment_aggregate", "ticket"]

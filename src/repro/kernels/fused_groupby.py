@@ -1,0 +1,161 @@
+"""Pallas TPU kernel: FUSED ticketing + partial-aggregate update.
+
+The paper executes group aggregation "in a vectorized fashion: ticketing an
+entire morsel, then aggregating that morsel" (§1).  The two standalone
+kernels (ticket_hash, segment_agg) realize that pipeline with the ticket
+vector making a round trip through HBM between phases.  This kernel fuses
+both phases in VMEM: a morsel's tickets never leave the core — the claim
+protocol resolves them and the scatter-accumulate consumes them in the same
+grid step.  Saves 4 B/row of HBM traffic and one kernel launch per morsel;
+on the 819 GB/s v5e that is ~25 % of the pipeline's minimum traffic for
+uint32 keys + f32 values.
+
+Same table/accumulator persistence (constant-index output blocks), same
+fuzzy-ticketer range claiming as ticket_hash.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ticket_hash import EMPTY_I32, _slot_hash_i32
+
+_NEUTRAL = {"sum": 0.0, "count": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def _fused_kernel(
+    keys_ref,      # (1, M) int32
+    values_ref,    # (1, M) f32
+    tkeys_ref,     # (C,) int32 persistent
+    ttks_ref,      # (C,) int32 persistent
+    kbt_ref,       # (G,) int32 persistent
+    acc_ref,       # (G,) f32 persistent
+    count_ref,     # (1,) int32 SMEM persistent
+    *,
+    capacity: int,
+    kind: str,
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        tkeys_ref[...] = jnp.full_like(tkeys_ref[...], EMPTY_I32)
+        ttks_ref[...] = jnp.zeros_like(ttks_ref[...])
+        kbt_ref[...] = jnp.full_like(kbt_ref[...], EMPTY_I32)
+        acc_ref[...] = jnp.full_like(acc_ref[...], _NEUTRAL[kind])
+        count_ref[0] = 0
+
+    keys = keys_ref[0, :]
+    vals = values_ref[0, :]
+    m = keys.shape[0]
+    lane = jax.lax.iota(jnp.int32, m)
+    valid = keys != EMPTY_I32
+    slot0 = _slot_hash_i32(keys, capacity)
+    g = kbt_ref.shape[0]
+
+    # ---- phase 1: ticket the morsel (identical protocol to ticket_hash) --
+    def cond(st):
+        return jnp.any(st[4])
+
+    def body(st):
+        tkeys, ttks, kbt, slot, active, out, count = st
+        probed_key = jnp.take(tkeys, slot)
+        probed_tk = jnp.take(ttks, slot)
+        hit = active & (probed_tk != 0) & (probed_key == keys)
+        out = jnp.where(hit, probed_tk, out)
+        active = active & ~hit
+        collide = active & (probed_tk != 0) & (probed_key != keys)
+        slot = jnp.where(collide, (slot + 1) & (capacity - 1), slot)
+        trying = active & (probed_tk == 0)
+        claim_slot = jnp.where(trying, slot, capacity)
+        claims = jnp.full((capacity,), m, jnp.int32).at[claim_slot].min(lane, mode="drop")
+        won = trying & (jnp.take(claims, slot) == lane)
+        rank = jnp.cumsum(won.astype(jnp.int32)) - 1
+        new_ticket = count + 1 + rank
+        pub_slot = jnp.where(won, slot, capacity)
+        tkeys = tkeys.at[pub_slot].set(keys, mode="drop")
+        ttks = ttks.at[pub_slot].set(new_ticket, mode="drop")
+        kbt_idx = jnp.where(won, new_ticket - 1, g)
+        kbt = kbt.at[kbt_idx].set(keys, mode="drop")
+        out = jnp.where(won, new_ticket, out)
+        active = active & ~won
+        count = count + jnp.sum(won.astype(jnp.int32))
+        return tkeys, ttks, kbt, slot, active, out, count
+
+    init = (
+        tkeys_ref[...], ttks_ref[...], kbt_ref[...], slot0, valid,
+        jnp.zeros((m,), jnp.int32), count_ref[0],
+    )
+    tkeys, ttks, kbt, _, _, tickets1, count = jax.lax.while_loop(cond, body, init)
+    tkeys_ref[...] = tkeys
+    ttks_ref[...] = ttks
+    kbt_ref[...] = kbt
+    count_ref[0] = count
+
+    # ---- phase 2: consume the tickets in-register (never hit HBM) --------
+    t0 = tickets1 - 1  # 0-based
+    tt = jnp.where(valid, t0, g)
+    v = jnp.ones_like(vals) if kind == "count" else vals
+    vv = jnp.where(valid, v, _NEUTRAL[kind])
+    acc = acc_ref[...]
+    if kind in ("sum", "count"):
+        acc_ref[...] = acc.at[tt].add(vv, mode="drop")
+    elif kind == "min":
+        acc_ref[...] = acc.at[tt].min(vv, mode="drop")
+    else:
+        acc_ref[...] = acc.at[tt].max(vv, mode="drop")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("capacity", "max_groups", "kind", "morsel_size", "interpret"),
+)
+def fused_groupby_pallas(
+    keys: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    capacity: int,
+    max_groups: int,
+    kind: str = "sum",
+    morsel_size: int = 1024,
+    interpret: bool = True,
+):
+    """One fused pass: keys+values morsels → (key_by_ticket, acc, count)."""
+    assert capacity & (capacity - 1) == 0
+    n = keys.shape[0]
+    assert n % morsel_size == 0
+    num = n // morsel_size
+    k2 = keys.astype(jnp.uint32).astype(jnp.int32).reshape(num, morsel_size)
+    v2 = values.astype(jnp.float32).reshape(num, morsel_size)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((capacity,), jnp.int32),
+        jax.ShapeDtypeStruct((capacity,), jnp.int32),
+        jax.ShapeDtypeStruct((max_groups,), jnp.int32),
+        jax.ShapeDtypeStruct((max_groups,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+    )
+    tkeys, ttks, kbt, acc, count = pl.pallas_call(
+        functools.partial(_fused_kernel, capacity=capacity, kind=kind),
+        grid=(num,),
+        in_specs=[
+            pl.BlockSpec((1, morsel_size), lambda i: (i, 0)),
+            pl.BlockSpec((1, morsel_size), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec((max_groups,), lambda i: (0,)),
+            pl.BlockSpec((max_groups,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM, block_shape=(1,), index_map=lambda i: (0,)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(k2, v2)
+    if kind in ("min", "max"):
+        acc = jnp.where(jnp.isinf(acc), jnp.nan, acc)
+    return kbt.astype(jnp.uint32), acc, count[0]

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+``ticket_hash_ref`` replays the identical morsel/claim-round protocol with
+plain jnp (it is core.ticketing.get_or_insert scanned over morsels), so
+ticket values must match the kernel **bit-for-bit**.  ``sort_ticket_ref``
+is the order-insensitive oracle (sort-based) used for map-level checks.
+``segment_agg_ref`` is jax.ops.segment_* on the raw rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ticketing as tk
+from repro.core.hashing import EMPTY_KEY
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "max_groups", "morsel_size"))
+def ticket_hash_ref(keys, *, capacity: int, max_groups: int, morsel_size: int = 1024):
+    n = keys.shape[0]
+    assert n % morsel_size == 0
+    table = tk.make_table(capacity, max_groups=max_groups)
+    km = keys.astype(jnp.uint32).reshape(-1, morsel_size)
+
+    def step(table, mk):
+        tickets, table = tk.get_or_insert(table, mk)
+        return table, tickets
+
+    table, tickets = jax.lax.scan(step, table, km)
+    return tickets.reshape(n), table.key_by_ticket, table.count
+
+
+def sort_ticket_ref(keys):
+    return tk.sort_ticketing(keys)
+
+
+@functools.partial(jax.jit, static_argnames=("num_groups", "kind"))
+def segment_agg_ref(tickets, values, *, num_groups: int, kind: str = "sum"):
+    t = tickets.reshape(-1)
+    v = values.reshape(-1).astype(jnp.float32)
+    ok = t >= 0
+    tt = jnp.where(ok, t, num_groups)
+    if kind == "count":
+        v = jnp.ones_like(v)
+    if kind in ("sum", "count"):
+        vv = jnp.where(ok, v, 0.0)
+        return jax.ops.segment_sum(vv, tt, num_segments=num_groups + 1)[:num_groups]
+    if kind == "min":
+        vv = jnp.where(ok, v, jnp.inf)
+        return jax.ops.segment_min(vv, tt, num_segments=num_groups + 1)[:num_groups]
+    vv = jnp.where(ok, v, -jnp.inf)
+    return jax.ops.segment_max(vv, tt, num_segments=num_groups + 1)[:num_groups]

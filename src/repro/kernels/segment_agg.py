@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: partial-aggregate update over ticketed morsels (§3.2).
+
+The accumulator vector stays resident in VMEM across the morsel grid (same
+persistence trick as the ticketing table) and each grid step folds one
+morsel of (ticket, value) rows into it.  Two in-core strategies, selected
+statically:
+
+  * ``scatter``: VMEM scatter-accumulate — the atomic-update analogue.
+    Duplicate tickets within the morsel serialize inside the scatter unit
+    (TPU's form of contention).
+  * ``onehot``: ``one_hot(tickets)ᵀ @ values`` on the MXU — contention
+    becomes dense systolic work; skew-immune; preferred for small G.
+
+The *thread-local* strategy is not a kernel concern: it is this same kernel
+run per device with the merge done by ``psum`` (core/distributed.py).
+
+Grid/BlockSpecs:
+  tickets : (num_morsels, M) blocked (1, M), VMEM
+  values  : (num_morsels, M) blocked (1, M), VMEM
+  acc     : (G,) constant block, VMEM (out, persistent across grid)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEUTRAL = {"sum": 0.0, "count": 0.0, "min": float("inf"), "max": float("-inf")}
+
+
+def _segment_kernel(tickets_ref, values_ref, acc_ref, *, kind: str, strategy: str):
+    i = pl.program_id(0)
+    g = acc_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref[...], _NEUTRAL[kind])
+
+    t = tickets_ref[0, :]
+    v = values_ref[0, :]
+    ok = t >= 0
+    if kind == "count":
+        v = jnp.ones_like(v)
+    acc = acc_ref[...]
+
+    if strategy == "onehot":
+        # MXU path: parked rows get an all-zero one-hot row (no effect).
+        tt = jnp.where(ok, t, -1)
+        onehot = (tt[:, None] == jax.lax.broadcasted_iota(jnp.int32, (1, g), 1)).astype(
+            acc.dtype
+        )
+        if kind in ("sum", "count"):
+            acc_ref[...] = acc + jnp.dot(
+                onehot.T, v[:, None].astype(acc.dtype),
+                preferred_element_type=jnp.float32,
+            )[:, 0]
+        else:
+            dense = jnp.where(
+                onehot > 0, v[:, None].astype(acc.dtype), _NEUTRAL[kind]
+            )
+            red = jnp.min(dense, axis=0) if kind == "min" else jnp.max(dense, axis=0)
+            acc_ref[...] = jnp.minimum(acc, red) if kind == "min" else jnp.maximum(acc, red)
+        return
+
+    assert strategy == "scatter", strategy
+    # VMEM scatter-accumulate; park invalid rows on slot g-1 with neutral v.
+    tt = jnp.where(ok, t, g - 1)
+    vv = jnp.where(ok, v.astype(acc.dtype), _NEUTRAL[kind])
+    if kind in ("sum", "count"):
+        acc_ref[...] = acc.at[tt].add(vv)
+    elif kind == "min":
+        acc_ref[...] = acc.at[tt].min(vv)
+    else:
+        acc_ref[...] = acc.at[tt].max(vv)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "kind", "strategy", "morsel_size", "interpret"),
+)
+def segment_agg_pallas(
+    tickets: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    num_groups: int,
+    kind: str = "sum",
+    strategy: str = "scatter",
+    morsel_size: int = 1024,
+    interpret: bool = True,
+):
+    """Fold (tickets, values) rows into a dense (num_groups,) accumulator.
+
+    tickets: (N,) int32, -1 rows ignored; values: (N,) f32.
+    """
+    n = tickets.shape[0]
+    assert n % morsel_size == 0, "pad to a morsel multiple"
+    num_morsels = n // morsel_size
+    t2 = tickets.astype(jnp.int32).reshape(num_morsels, morsel_size)
+    v2 = values.astype(jnp.float32).reshape(num_morsels, morsel_size)
+
+    acc = pl.pallas_call(
+        functools.partial(_segment_kernel, kind=kind, strategy=strategy),
+        grid=(num_morsels,),
+        in_specs=[
+            pl.BlockSpec((1, morsel_size), lambda i: (i, 0)),
+            pl.BlockSpec((1, morsel_size), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_groups,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((num_groups,), jnp.float32),
+        interpret=interpret,
+    )(t2, v2)
+    return acc

@@ -1,0 +1,193 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs / (chips · peak_FLOP/s)
+  memory     = HLO_bytes / (chips · HBM_bw)
+  collective = Σ collective operand bytes / (chips · link_bw)
+
+FLOPs/bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD optimized HLO
+(``compiled.as_text()``) and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.  The parsed
+HLO is per-device (SPMD), so the sum is already per-chip traffic.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """bytes of one 'dtype[dims]' string."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes of every collective op, by op kind.
+
+    HLO line shape: ``%name = bf16[16,128]{...} all-reduce(...)`` — we take
+    the RESULT shape as the measure of moved bytes (for all-gather the
+    result is the gathered size = wire bytes × ring factor; a conservative,
+    consistent convention — noted in EXPERIMENTS.md).
+    Tuple-shaped results ``(f32[..], f32[..])`` are summed element-wise.
+    """
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result shape appears between '=' and the op name
+        for kind in _COLLECTIVES:
+            if re.search(rf"\b{kind}(-start|-done)?\(", stripped):
+                if f" {kind}-done(" in stripped:
+                    continue  # avoid double counting start/done pairs
+                eq = stripped.find("=")
+                if eq < 0:
+                    continue
+                # search for the op mnemonic AFTER '=' (the LHS register
+                # name also contains it: "%all-reduce.188 = ... all-reduce(")
+                op = stripped.find(kind, eq)
+                if op < 0:
+                    continue
+                shapes = _SHAPE_RE.findall(stripped[eq + 1 : op])
+                total = 0
+                for dt, dims in shapes:
+                    n = 1
+                    if dims:
+                        for d in dims.split(","):
+                            n *= int(d)
+                    total += n * _DTYPE_BYTES[dt]
+                out[kind] += total
+                counts[kind] += 1
+                break
+    out_all = dict(out)
+    out_all["counts"] = counts  # type: ignore[assignment]
+    return out_all
+
+
+@dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_flops_frac: float
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def derive_terms(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    cost: dict,
+    coll: dict[str, int],
+    model_flops: float,
+) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(sum(v for k, v in coll.items() if k in _COLLECTIVES))
+    # cost_analysis is per-device post-SPMD on the CPU backend when lowering
+    # SPMD modules; guard for whole-program numbers by normalizing: XLA
+    # reports the partitioned module's cost → already per chip.
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    collective_s = cbytes / ICI_BW_PER_LINK
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / chips / flops if flops else 0.0
+    return RooflineTerms(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=flops,
+        hlo_bytes=byts,
+        coll_bytes=cbytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops=model_flops,
+        useful_flops_frac=useful,
+    )
+
+
+def model_flops_estimate(cfg, cell) -> float:
+    """MODEL_FLOPS = 6·N·D (dense train) / 2·N·D (inference), N = active
+    params, D = tokens processed."""
+    n_active = count_active_params(cfg)
+    tokens = cell.global_batch * (cell.seq_len if cell.mode != "decode" else 1)
+    mult = 6.0 if cell.mode == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def count_active_params(cfg) -> float:
+    """Active-parameter count from the config (MoE counts top_k of E)."""
+    d, v, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    per_layer = 0.0
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        ad, kvd = cfg.attn_dim, cfg.kv_dim
+        attn = d * ad * 2 + d * kvd * 2
+        if cfg.moe_num_experts:
+            frac = cfg.moe_top_k / cfg.moe_num_experts
+            moe = 3 * d * cfg.moe_d_ff * cfg.moe_num_experts * frac
+            moe += 3 * d * cfg.moe_shared_d_ff + d * cfg.moe_num_experts
+            per_layer = attn + moe
+        else:
+            nmat = 3 if cfg.mlp_kind in ("swiglu", "geglu") else 2
+            per_layer = attn + nmat * d * cfg.d_ff
+    elif cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * d
+        n = cfg.ssm_state
+        h = d_inner // cfg.ssm_head_dim
+        mamba = d * (2 * d_inner + 2 * n + h) + d_inner * d
+        per_layer = mamba  # attn blocks handled below
+    elif cfg.family == "ssm":
+        per_layer = 4 * d * d + d * d + 2 * d * cfg.d_ff + d * d
+    total = emb + per_layer * L
+    if cfg.family == "hybrid" and cfg.attn_every:
+        ad, kvd = cfg.attn_dim, cfg.kv_dim
+        attn = d * ad * 2 + d * kvd * 2 + 3 * d * cfg.d_ff
+        total += attn  # shared weights count once
+    if cfg.encoder_layers:
+        total += per_layer * cfg.encoder_layers
+    return float(total)

@@ -1,0 +1,55 @@
+"""Serving launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
+      --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeLoop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = jax.make_mesh((jax.device_count(), 1), ("data", "model"))
+    loop = ServeLoop(mesh, cfg, params, slots=args.slots, max_len=args.max_len)
+
+    rng = jax.random.PRNGKey(1)
+    pending = [
+        Request(uid=i,
+                prompt=jax.random.randint(jax.random.fold_in(rng, i),
+                                          (args.prompt_len,), 0, cfg.vocab_size),
+                max_new=args.max_new)
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    done = 0
+    while pending:
+        batch, pending = pending[: args.slots], pending[args.slots :]
+        for r in loop.run_batch(batch):
+            done += 1
+    dt = time.time() - t0
+    total_new = done * args.max_new
+    print(f"served {done} requests, {total_new} tokens in {dt:.1f}s "
+          f"({total_new/dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""ShapeDtypeStruct input stand-ins for every (arch × shape × mode) cell.
+
+``input_specs`` returns (args, in_shardings, donate) for the step function
+the cell lowers — weak-type-correct, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig, ShapeCell
+from repro.optim import adamw
+from repro.parallel.sharding import (
+    batch_spec,
+    cache_specs,
+    dp_axes,
+    param_specs,
+)
+
+
+def _sds(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree,
+    )
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: tf.init_params(k, cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt(params):
+    return jax.eval_shape(adamw.init, params)
+
+
+def batch_sds(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    """Training/prefill batch stand-ins + specs."""
+    b, s = cell.global_batch, cell.seq_len
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    bspec = P(dp, None) if b % dp_size == 0 else P(None, None)
+    args: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    specs: dict[str, Any] = {"tokens": bspec}
+    if cell.mode == "train":
+        args["targets"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        specs["targets"] = bspec
+    if cfg.frontend == "vision":
+        args["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+        specs["frontend_embeds"] = P(dp, None, None) if b % dp_size == 0 else P(None, None, None)
+    if cfg.encoder_layers:
+        args["encoder_frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+        specs["encoder_frames"] = P(dp, None, None) if b % dp_size == 0 else P(None, None, None)
+    return args, specs
+
+
+def cache_sds(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    """Decode caches as SDS + specs. Batch-1 long-context cells shard the
+    cache sequence across every mesh axis (sequence-parallel decode)."""
+    b = cell.global_batch
+    # +512 decode headroom, chosen so the cache sequence dim stays divisible
+    # by any shard count we use (16 for model-axis, 512 for all-axes
+    # sequence-parallel long-context decode)
+    max_len = cell.seq_len + 512
+    caches = jax.eval_shape(
+        lambda: tf.init_caches(cfg, b, max_len, jnp.dtype(cfg.dtype))
+    )
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    seq_shard = b % dp_size != 0
+    if not seq_shard:
+        specs = cache_specs(mesh, cfg, caches)
+    else:
+        import numpy as np
+        all_axes = tuple(mesh.axis_names)
+
+        def _ps(path):
+            parts = []
+            for k in path:
+                if isinstance(k, jax.tree_util.DictKey):
+                    parts.append(str(k.key))
+                elif isinstance(k, jax.tree_util.GetAttrKey):
+                    parts.append(str(k.name))
+                else:
+                    parts.append(str(getattr(k, "idx", k)))
+            return "/".join(parts)
+
+        def spec(path, leaf):
+            ps = _ps(path)
+            nd = np.ndim(leaf)
+            if ps.split("/")[-1] in ("k", "v"):
+                # (..., B, S, KV, hd): sequence-parallel over ALL axes
+                return P(*([None] * (nd - 3)), all_axes, None, None)
+            if "state" in ps and nd >= 4:
+                # (..., B, H, hd, N): shard heads over 'model'
+                return P(*([None] * (nd - 3)), "model", None, None)
+            return P()
+
+        specs = jax.tree_util.tree_map_with_path(spec, caches)
+    return caches, specs, seq_shard
+
+
+def decode_tokens_sds(cell: ShapeCell, mesh: Mesh, seq_shard: bool):
+    b = cell.global_batch
+    dp = dp_axes(mesh)
+    spec = P(None, None) if seq_shard else P(dp, None)
+    return jax.ShapeDtypeStruct((b, 1), jnp.int32), spec

@@ -1,0 +1,67 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b \
+      --batch 8 --seq 128 --steps 100 [--reduced] [--elastic]
+
+On real TPU pods this binary is what every host runs (jax.distributed
+initialization is a no-op on single-host); in the container it runs on
+however many simulated devices XLA_FLAGS provides.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import SyntheticLM
+from repro.train import elastic
+from repro.train.fault_tolerance import ElasticRunner
+from repro.train.loop import TrainHParams, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS + [a.replace("_", "-") for a in ARCH_IDS])
+    ap.add_argument("--reduced", action="store_true", help="smoke-size config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--no-ticketed-embedding", action="store_true")
+    ap.add_argument("--elastic", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    hp = TrainHParams(
+        peak_lr=args.lr,
+        warmup=min(20, args.steps // 10 + 1),
+        total_steps=args.steps,
+        ticketed_embedding=not args.no_ticketed_embedding,
+    )
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    data = SyntheticLM(cfg, batch=args.batch, seq=args.seq)
+
+    def build_and_train(mesh, straggler):
+        return train_loop(
+            mesh, cfg, hp, iter(data), steps=args.steps,
+            checkpoint_manager=mgr, checkpoint_every=args.ckpt_every,
+        )
+
+    if args.elastic:
+        runner = ElasticRunner(
+            lambda devs: elastic.largest_mesh(devs, args.model_parallel), mgr
+        )
+        runner.run(build_and_train)
+    else:
+        mesh = elastic.largest_mesh(jax.devices(), args.model_parallel)
+        build_and_train(mesh, None)
+    mgr.wait()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,248 @@
+"""Attention: GQA with every variant the assigned archs need.
+
+Supports: grouped-query attention (any kv:q ratio incl. MHA), causal and
+sliding-window masks, gemma2 logit softcapping, qwen3 qk-norm, qwen2.5 QKV
+bias, stablelm partial rotary, cross-attention (enc-dec), and decode with a
+preallocated KV cache (in-place dynamic_update_slice so pjit keeps the cache
+sharded and donated).
+
+Layout: activations (B, S, D); heads live in (B, S, H, hd) and attention
+einsums contract in fp32 (`preferred_element_type`) for numerics.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Params,
+    apply_rope,
+    dense,
+    dense_init,
+    rmsnorm,
+    rmsnorm_init,
+    softcap,
+)
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S_max, KVH, hd)
+    v: jnp.ndarray  # (B, S_max, KVH, hd)
+    length: jnp.ndarray  # () int32 — tokens already cached
+
+
+# fixed symmetric scale for int8 KV prefixes (per-head calibration is the
+# production version; the scale only matters for numerics, not cost)
+KV_Q8_SCALE = 0.05
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, ad, kvd = cfg.d_model, cfg.attn_dim, cfg.kv_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, ad, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, kvd, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, kvd, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], ad, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(cfg.head_dim)
+        p["k_norm"] = rmsnorm_init(cfg.head_dim)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _mask(q_pos, k_pos, window, causal: bool):
+    """(Sq, Sk) additive mask in fp32. ``window`` may be None (static no
+    window), a static int, or a traced int32 where ≤0 means "global" —
+    the traced form lets scan-over-layers alternate local/global (gemma2)
+    with one compiled block body."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        in_window = k_pos[None, :] > q_pos[:, None] - window
+        is_local = jnp.asarray(window) > 0
+        ok &= in_window | ~is_local
+    return jnp.where(ok, 0.0, -1e30)
+
+
+def multihead_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    window: int | None = None,
+    causal: bool = True,
+    cache: KVCache | None = None,
+    memory: jnp.ndarray | None = None,
+    positions: jnp.ndarray | None = None,
+):
+    """Returns (out, new_cache).
+
+    Train/prefill: cache=None → full (S, S) masked attention.
+    Decode: cache given, x is (B, 1, D); K/V appended in place.
+    Cross-attn: memory (B, Sm, D) given → K/V from memory, no mask.
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = _split_heads(dense(p["wq"], x), h, hd)
+    kv_src = memory if memory is not None else x
+    k = _split_heads(dense(p["wk"], kv_src), kvh, hd)
+    v = _split_heads(dense(p["wv"], kv_src), kvh, hd)
+
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+
+    if memory is None:  # self-attention → rope
+        if positions is None:
+            base = cache.length if cache is not None else 0
+            positions = base + jnp.arange(s)[None, :]
+        q = apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+
+    new_cache = None
+    if cache is not None:
+        # in-place append at cache.length (decode step / chunked prefill)
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), cache.length, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), cache.length, axis=1)
+        new_cache = KVCache(k_all, v_all, cache.length + s)
+        k, v = k_all, v_all
+
+    # GQA: fold q heads as (kvh, rep) and contract against UNEXPANDED K/V —
+    # the cache is never materialized h/kvh times (decisive for decode
+    # memory traffic; see EXPERIMENTS.md §Perf).
+    rep = h // kvh
+    sq, sk = q.shape[1], k.shape[1]
+    qg = q.reshape(b, sq, kvh, rep, hd)
+
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k, preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cfg.attn_logit_softcap)
+
+    if memory is None:
+        q_pos = (positions[0] if positions.ndim > 1 else positions).astype(jnp.int32)
+        k_pos = jnp.arange(sk, dtype=jnp.int32)
+        m = _mask(q_pos, k_pos, window, causal)
+        if cache is not None:  # never attend beyond written length
+            m = m + jnp.where(k_pos[None, :] < cache.length + s, 0.0, -1e30)
+        logits = logits + m[None, None, None, :, :]
+
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    out = dense(p["wo"], out.reshape(b, sq, h * hd))
+    return out, new_cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def twobuf_attention(
+    p: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,          # (B, 1, D) — decode only
+    prefix: KVCache,          # frozen, sequence-sharded over 'model'
+    tail: KVCache,            # small, replicated; new tokens append here
+    *,
+    window=None,
+):
+    """Two-buffer decode attention (§Perf iteration 1, EXPERIMENTS.md).
+
+    The naive decode cache appends with a dynamic_update_slice on the
+    sequence-sharded dim, which XLA can only lower by all-gathering the
+    whole 32k cache every step (the measured ~35 s collective term).  Here
+    the big prefix is READ-ONLY (its shards never move) and appends go to a
+    replicated tail buffer; the softmax is combined flash-decoding style,
+    so the only cross-shard traffic is the per-shard partial (m, Σexp,
+    Σw·V) statistics — bytes ∝ B·H·hd instead of B·S·KV·hd.
+
+    Returns (out, new_tail).
+    """
+    b, s, _ = x.shape
+    assert s == 1, "two-buffer path is decode-only"
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    rep = h // kvh
+
+    q = _split_heads(dense(p["wq"], x), h, hd)
+    k = _split_heads(dense(p["wk"], x), kvh, hd)
+    v = _split_heads(dense(p["wv"], x), kvh, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+
+    q_pos = prefix.length + tail.length  # absolute position of this token
+    pos = q_pos + jnp.arange(1)[None, :]
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.rope_fraction)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.rope_fraction)
+
+    # append to the REPLICATED tail only — never touches prefix shards
+    tk = jax.lax.dynamic_update_slice_in_dim(tail.k, k.astype(tail.k.dtype), tail.length, axis=1)
+    tv = jax.lax.dynamic_update_slice_in_dim(tail.v, v.astype(tail.v.dtype), tail.length, axis=1)
+    new_tail = KVCache(tk, tv, tail.length + 1)
+
+    qg = q.reshape(b, 1, kvh, rep, hd)
+    scale = hd**-0.5
+
+    def _mask(lg, base_pos, valid_len, klen):
+        kpos = base_pos + jnp.arange(klen, dtype=jnp.int32)
+        ok = kpos[None, :] <= q_pos
+        ok &= kpos[None, :] < base_pos + valid_len
+        if window is not None:
+            in_win = kpos[None, :] > q_pos - window
+            ok &= in_win | ~(jnp.asarray(window) > 0)
+        return lg + jnp.where(ok, 0.0, -1e30)[None, None, None, :, :]
+
+    def masked_logits(keys, base_pos, valid_len):
+        lg = jnp.einsum("bqgrd,bkgd->bgrqk", qg, keys,
+                        preferred_element_type=jnp.float32) * scale
+        lg = softcap(lg, cfg.attn_logit_softcap)
+        return _mask(lg, base_pos, valid_len, keys.shape[1])
+
+    if prefix.k.dtype == jnp.int8:
+        # W8A8 prefix attention (§Perf): quantize q per (head) and contract
+        # int8×int8 on the MXU int8 path — the 32k cache is read at 1 B/elt
+        # and NEVER materialized in bf16.  V stays int8 in the PV einsum
+        # too (weights wp are ≤1, int8 V scales out linearly).
+        qmax = jnp.max(jnp.abs(qg.astype(jnp.float32)), axis=-1, keepdims=True) + 1e-8
+        q_q8 = jnp.clip(jnp.round(qg.astype(jnp.float32) / qmax * 127.0), -127, 127).astype(jnp.int8)
+        lg_i = jnp.einsum("bqgrd,bkgd->bgrqk", q_q8, prefix.k,
+                          preferred_element_type=jnp.int32)
+        qs = qmax.reshape(b, 1, kvh, rep, 1).transpose(0, 2, 3, 1, 4)
+        lg = lg_i.astype(jnp.float32) * (qs / 127.0) * KV_Q8_SCALE * scale
+        lg = softcap(lg, cfg.attn_logit_softcap)
+        lp = _mask(lg, 0, prefix.length, prefix.k.shape[1])
+        pv_int8 = True
+    else:
+        lp = masked_logits(prefix.k, 0, prefix.length)      # (b,g,r,1,Sp)
+        pv_int8 = False
+    lt = masked_logits(tk, prefix.length, new_tail.length)  # (b,g,r,1,St)
+
+    # flash combine: per-buffer max/sumexp/weighted-V, then merge — with lp
+    # sharded over Sp the reduces become tiny psums of statistics.
+    m = jnp.maximum(jnp.max(lp, axis=-1, keepdims=True),
+                    jnp.max(lt, axis=-1, keepdims=True))
+    wp = jnp.exp(lp - m)
+    wt = jnp.exp(lt - m)
+    denom = jnp.sum(wp, axis=-1, keepdims=True) + jnp.sum(wt, axis=-1, keepdims=True)
+    if pv_int8:
+        op = jnp.einsum("bgrqk,bkgd->bqgrd", wp, prefix.v.astype(jnp.float32))
+        op = (op * KV_Q8_SCALE).astype(x.dtype)
+    else:
+        op = jnp.einsum("bgrqk,bkgd->bqgrd", wp.astype(x.dtype), prefix.v)
+    ot = jnp.einsum("bgrqk,bkgd->bqgrd", wt.astype(x.dtype), tv)
+    out = (op + ot) / denom.transpose(0, 3, 1, 2, 4).astype(x.dtype)
+    out = dense(p["wo"], out.reshape(b, 1, h * hd))
+    return out, new_tail

@@ -1,0 +1,221 @@
+"""Shared layers: norms, embeddings (incl. the paper-powered
+TicketedEmbedding), MLPs, RoPE.
+
+Parameters are plain pytrees (nested dicts of jnp arrays); initializers take
+an explicit PRNG key.  Compute runs in ``cfg.dtype`` (bf16 by default) with
+fp32 norms/softmax accumulations, matching production LM training practice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int) -> Params:
+    return rmsnorm_init(d) if kind == "rmsnorm" else layernorm_init(d)
+
+
+def apply_norm(kind: str, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return rmsnorm(p, x) if kind == "rmsnorm" else layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, bias: bool = False, scale: float | None = None) -> Params:
+    std = scale if scale is not None else d_in ** -0.5
+    p = {"w": jax.random.normal(key, (d_in, d_out), jnp.float32) * std}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+    return p
+
+
+def dense(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_q8" in p:
+        # weight-only int8 (serving): per-out-channel scale, dequant fused
+        # into the matmul epilogue by XLA — halves weight HBM reads
+        w = p["w_q8"].astype(x.dtype) * p["w_scale"].astype(x.dtype)
+    else:
+        w = p["w"].astype(x.dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def quantize_dense_params(params: Params) -> Params:
+    """Weight-only int8 transform: every 2-D dense kernel {"w": (in,out)}
+    becomes {"w_q8": int8, "w_scale": (1,out) f32}. Works on real arrays
+    AND ShapeDtypeStruct trees (for the dry-run)."""
+    import numpy as np
+
+    def walk(node):
+        if isinstance(node, dict):
+            if "w" in node and getattr(node["w"], "ndim", 0) >= 2:
+                # (…, in, out) — leading dims are scan stacks (L, …)
+                w = node["w"]
+                rest = {k: v for k, v in node.items() if k != "w"}
+                scale_shape = (*w.shape[:-2], 1, w.shape[-1])
+                if isinstance(w, jax.ShapeDtypeStruct):
+                    return {
+                        "w_q8": jax.ShapeDtypeStruct(w.shape, jnp.int8),
+                        "w_scale": jax.ShapeDtypeStruct(scale_shape, jnp.float32),
+                        **{k: walk(v) for k, v in rest.items()},
+                    }
+                scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True) / 127.0 + 1e-8
+                q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+                return {"w_q8": q, "w_scale": scale,
+                        **{k: walk(v) for k, v in rest.items()}}
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
+# ---------------------------------------------------------------------------
+# embeddings — including the paper's technique as a first-class feature
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * (d ** -0.5)}
+
+
+def embed(p: Params, ids: jnp.ndarray, dtype) -> jnp.ndarray:
+    return jnp.take(p["table"].astype(dtype), ids, axis=0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def ticketed_embed(table: jnp.ndarray, ids: jnp.ndarray, max_unique: int, capacity: int):
+    """Embedding gather whose BACKWARD runs the paper's pipeline.
+
+    The VJP of a gather is `GROUP BY token_id SUM(cotangent)` over B·S rows
+    into a (vocab, d) table.  Standard autodiff emits one giant scatter-add
+    keyed by raw token ids; here we ticket the ids (dedup → dense tickets),
+    segment-sum cotangents in dense ticket space (≤ max_unique rows), and
+    land ONE dense scatter into the table — the paper's ticketing
+    indirection applied to embedding-gradient aggregation.
+
+    max_unique: static bound on distinct tokens per batch (≥ true count;
+    vocab-size worst case). capacity: ticket-table slots (pow2 ≥ 2×max_unique).
+    """
+    return jnp.take(table, ids.reshape(-1), axis=0).reshape(*ids.shape, table.shape[1])
+
+
+def _ticketed_embed_fwd(table, ids, max_unique, capacity):
+    out = ticketed_embed(table, ids, max_unique, capacity)
+    return out, (table.shape, ids)
+
+
+def _ticketed_embed_bwd(max_unique, capacity, res, g):
+    from repro.core import ticketing as tk
+
+    (vocab, d), ids = res
+    flat_ids = ids.reshape(-1)
+    gflat = g.reshape(-1, d)
+    # 1) ticketing: dedup token ids → dense tickets (the GROUP BY key step)
+    table_t = tk.make_table(capacity, max_groups=max_unique)
+    tickets, table_t = tk.get_or_insert(table_t, flat_ids.astype(jnp.uint32))
+    # 2) dense segment-sum of cotangents in ticket space (the update step)
+    seg = jax.ops.segment_sum(
+        gflat.astype(jnp.float32),
+        jnp.where(tickets >= 0, tickets, max_unique),
+        num_segments=max_unique + 1,
+    )[:max_unique]
+    # 3) materialize: ONE dense scatter into the (vocab, d) table
+    uniq_ids = table_t.key_by_ticket.astype(jnp.int32)  # (max_unique,)
+    live = jnp.arange(max_unique) < table_t.count
+    dtable = jnp.zeros((vocab, d), jnp.float32)
+    dtable = dtable.at[jnp.where(live, uniq_ids, vocab)].add(seg, mode="drop")
+    return (dtable, None)
+
+
+ticketed_embed.defvjp(_ticketed_embed_fwd, _ticketed_embed_bwd)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, kind: str = "swiglu") -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, d, d_ff),
+            "w_up": dense_init(k2, d, d_ff),
+            "w_down": dense_init(k3, d_ff, d),
+        }
+    return {"w_up": dense_init(k1, d, d_ff), "w_down": dense_init(k2, d_ff, d)}
+
+
+def mlp(p: Params, x: jnp.ndarray, kind: str = "swiglu") -> jnp.ndarray:
+    if kind == "swiglu":
+        return dense(p["w_down"], jax.nn.silu(dense(p["w_gate"], x)) * dense(p["w_up"], x))
+    if kind == "geglu":
+        return dense(p["w_down"], jax.nn.gelu(dense(p["w_gate"], x), approximate=True) * dense(p["w_up"], x))
+    return dense(p["w_down"], jax.nn.gelu(dense(p["w_up"], x), approximate=True))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, fraction: float, theta: float):
+    rot = int(head_dim * fraction) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return inv, rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float, fraction: float = 1.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv, rot = rope_freqs(hd, fraction, theta)
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., S, 1, rot/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return (jnp.tanh(x.astype(jnp.float32) / cap) * cap).astype(x.dtype)

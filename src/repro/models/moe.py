@@ -1,0 +1,232 @@
+"""Mixture-of-Experts with group-by-powered dispatch.
+
+MoE routing **is** a GROUP BY: tokens are grouped by expert id and each
+group is aggregated through its expert.  We implement dispatch with the
+paper's two strategies, selected by how the layer is executed:
+
+* single-device / TP execution (``moe_mlp_dense``): *sort-based dispatch* —
+  tokens are sorted by expert id (a radix partition — the partitioned
+  strategy), the per-expert histogram comes from a direct-ticketed GROUP BY
+  COUNT (perfect hashing: the key domain is [0, E)), and expert FFNs run as
+  one ``jax.lax.ragged_dot`` over contiguous groups.
+
+* expert-parallel execution (``moe_mlp_ep``, used by the mesh runtime):
+  sender-side partitioned group-by into per-(owner, expert) capacity
+  buckets, one ``all_to_all`` each way, receiver-side batched expert
+  matmuls on the already-grouped buckets.  This is exactly the Leis
+  exchange with pre-aggregation replaced by pre-*grouping* (aggregation is
+  not associative over tokens here, but the partition/exchange/finish
+  topology is identical — see DESIGN.md §3).
+
+Router statistics (load-balance aux loss) use the dense one-hot (MXU)
+update — GROUP BY COUNT with the onehot strategy, skew-immune by
+construction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense, dense_init
+
+
+def moe_init(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    e = cfg.moe_experts_padded  # padded experts never routed to (dead rows)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, cfg.moe_num_experts, scale=0.02),
+        # experts stacked on a leading (padded) E axis → sharded over 'model'
+        "w_gate": jax.random.normal(ks[1], (e, d, f), jnp.float32) * d**-0.5,
+        "w_up": jax.random.normal(ks[2], (e, d, f), jnp.float32) * d**-0.5,
+        "w_down": jax.random.normal(ks[3], (e, f, d), jnp.float32) * f**-0.5,
+    }
+    if cfg.moe_shared_d_ff:
+        from repro.models.layers import mlp_init
+
+        p["shared"] = mlp_init(ks[4], d, cfg.moe_shared_d_ff, "swiglu")
+        p["shared_gate"] = dense_init(ks[4], d, 1, scale=0.02)
+    return p
+
+
+class RouterOut(NamedTuple):
+    weights: jnp.ndarray   # (T, k) combine weights (softmax over chosen)
+    experts: jnp.ndarray   # (T, k) int32 expert ids
+    aux_loss: jnp.ndarray  # () load-balance loss
+    histogram: jnp.ndarray  # (E,) tokens routed per expert (GROUP BY COUNT)
+
+
+def route(p: Params, cfg: ModelConfig, x2d: jnp.ndarray) -> RouterOut:
+    t = x2d.shape[0]
+    e, k = cfg.moe_num_experts, cfg.moe_top_k
+    ep = cfg.moe_experts_padded
+    logits = dense(p["router"], x2d).astype(jnp.float32)  # (T, E) real experts
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, k)  # ids ∈ [0, E) ⊂ [0, Epad)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # GROUP BY expert COUNT via the dense one-hot (MXU) update — the
+    # paper's contention-free strategy for tiny cardinality (E ≤ 64).
+    onehot = jax.nn.one_hot(ids.reshape(-1), ep, dtype=jnp.float32)  # (T*k, Epad)
+    hist = jnp.sum(onehot, axis=0)
+    # Switch-style aux loss: E * Σ_e f_e · P_e (real experts only)
+    f_e = hist[:e] / jnp.maximum(jnp.sum(hist), 1.0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_loss * e * jnp.sum(f_e * p_e)
+    return RouterOut(w.astype(x2d.dtype), ids.astype(jnp.int32), aux, hist)
+
+
+# ---------------------------------------------------------------------------
+# sort-based dispatch (single device / TP): ragged_dot over grouped tokens
+# ---------------------------------------------------------------------------
+
+def moe_mlp_dense(p: Params, cfg: ModelConfig, x: jnp.ndarray):
+    """(B, S, D) → (B, S, D); experts computed with ragged grouped matmuls.
+
+    Sort-based dispatch = the partitioned group-by strategy: stable-sort the
+    (token, slot) assignments by expert id; contiguous runs are the groups.
+    """
+    b, s, d = x.shape
+    e, k, f = cfg.moe_experts_padded, cfg.moe_top_k, cfg.moe_d_ff
+    x2 = x.reshape(-1, d)
+    t = x2.shape[0]
+    r = route(p, cfg, x2)
+
+    flat_e = r.experts.reshape(-1)                      # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = r.weights.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)            # radix partition
+    ge = jnp.take(flat_e, order)
+    gtok = jnp.take(flat_tok, order)
+    gw = jnp.take(flat_w, order)
+    gx = jnp.take(x2, gtok, axis=0)                     # (T*k, D) grouped
+
+    group_sizes = r.histogram.astype(jnp.int32)         # (E,)
+
+    def rdot(lhs, rhs):
+        return jax.lax.ragged_dot(
+            lhs.astype(jnp.float32), rhs.astype(jnp.float32), group_sizes
+        ).astype(x.dtype)
+
+    h = jax.nn.silu(rdot(gx, p["w_gate"])) * rdot(gx, p["w_up"])  # (T*k, F)
+    yo = rdot(h, p["w_down"])                                     # (T*k, D)
+
+    out = jnp.zeros((t, d), x.dtype).at[gtok].add(yo * gw[:, None])
+    if "shared" in p:
+        from repro.models.layers import mlp
+
+        sg = jax.nn.sigmoid(dense(p["shared_gate"], x2).astype(jnp.float32)).astype(x.dtype)
+        out = out + sg * mlp(p["shared"], x2, "swiglu")
+    return out.reshape(b, s, d), r.aux_loss
+
+
+# ---------------------------------------------------------------------------
+# expert-parallel dispatch (mesh): partition → all_to_all → expert → return
+# ---------------------------------------------------------------------------
+
+def moe_mlp_ep(
+    p_local: Params,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    axis: str,
+    num_shards: int,
+    capacity_per_expert: int,
+    quantize_dispatch: bool = False,
+):
+    """Inside shard_map: experts sharded over ``axis`` (leading E dim),
+    tokens local to this device.  Returns (out, aux_loss).
+
+    Sender side is the paper's partitioned strategy verbatim: stable sort by
+    (owner, expert), positions within each bucket via cumsum, capacity
+    clamp (token dropping — overflow rows keep only their other k-1 routes),
+    scatter into fixed (owner, E_local·C) buckets, one all_to_all.
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe_experts_padded, cfg.moe_top_k
+    e_local = e // num_shards
+    cap = capacity_per_expert
+    x2 = x.reshape(-1, d)
+    t = x2.shape[0]
+    r = route(p_local, cfg, x2)  # router params replicated across shards
+
+    flat_e = r.experts.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    flat_w = r.weights.reshape(-1)
+
+    # position of each row within its expert group (after stable sort)
+    order = jnp.argsort(flat_e, stable=True)
+    pos_sorted = jnp.arange(t * k) - jnp.searchsorted(
+        jnp.take(flat_e, order), jnp.take(flat_e, order), side="left"
+    )
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+    keep = pos < cap
+    owner = flat_e // e_local
+    local_e = flat_e % e_local
+    slot = local_e * cap + pos  # slot within the owner's bucket
+    dest = jnp.where(keep, owner * (e_local * cap) + slot, num_shards * e_local * cap)
+
+    send = jnp.zeros((num_shards * e_local * cap + 1, d), x.dtype)
+    send = send.at[dest].set(jnp.take(x2, flat_tok, axis=0), mode="drop")[:-1]
+    send = send.reshape(num_shards, e_local * cap, d)
+    if quantize_dispatch:
+        # int8 a2a (§Perf): halves the dispatch wire bytes; per-shard scale
+        # travels alongside (DeepSeek-style low-precision dispatch)
+        s_scale = jnp.max(jnp.abs(send.astype(jnp.float32)), axis=(1, 2), keepdims=True) / 127.0 + 1e-8
+        send_q = jnp.clip(jnp.round(send.astype(jnp.float32) / s_scale), -127, 127).astype(jnp.int8)
+        recv_q = jax.lax.all_to_all(send_q, axis, split_axis=0, concat_axis=0, tiled=False)
+        recv_s = jax.lax.all_to_all(
+            jnp.broadcast_to(s_scale, (num_shards, 1, 1)), axis,
+            split_axis=0, concat_axis=0, tiled=False,
+        )
+        recv = (recv_q.astype(jnp.float32) * recv_s).astype(x.dtype)
+    else:
+        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0, tiled=False)
+    # recv: (num_shards, E_local*cap, D) — sender-major, already grouped by
+    # local expert within each sender block. Reshape to per-expert batches:
+    xe = (
+        recv.reshape(num_shards, e_local, cap, d)
+        .transpose(1, 0, 2, 3)
+        .reshape(e_local, num_shards * cap, d)
+    )
+
+    wg, wu, wd = p_local["w_gate"], p_local["w_up"], p_local["w_down"]
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, wg.astype(x.dtype))) * jnp.einsum(
+        "ecd,edf->ecf", xe, wu.astype(x.dtype)
+    )
+    ye = jnp.einsum("ecf,efd->ecd", h, wd.astype(x.dtype))
+
+    # route results back: inverse transpose + all_to_all
+    back = (
+        ye.reshape(e_local, num_shards, cap, d)
+        .transpose(1, 0, 2, 3)
+        .reshape(num_shards, e_local * cap, d)
+    )
+    if quantize_dispatch:
+        b_scale = jnp.max(jnp.abs(back.astype(jnp.float32)), axis=(1, 2), keepdims=True) / 127.0 + 1e-8
+        back_q = jnp.clip(jnp.round(back.astype(jnp.float32) / b_scale), -127, 127).astype(jnp.int8)
+        ret_q = jax.lax.all_to_all(back_q, axis, split_axis=0, concat_axis=0, tiled=False)
+        ret_s = jax.lax.all_to_all(
+            jnp.broadcast_to(b_scale, (num_shards, 1, 1)), axis,
+            split_axis=0, concat_axis=0, tiled=False,
+        )
+        ret = (ret_q.astype(jnp.float32) * ret_s).astype(x.dtype)
+    else:
+        ret = jax.lax.all_to_all(back, axis, split_axis=0, concat_axis=0, tiled=False)
+    ret = ret.reshape(num_shards * e_local * cap, d)
+
+    # combine: each kept (token, slot) reads its expert output back
+    gathered = jnp.take(ret, jnp.clip(dest, 0, ret.shape[0] - 1), axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    out = jnp.zeros((t, d), x.dtype).at[flat_tok].add(gathered * flat_w[:, None])
+
+    if "shared" in p_local:
+        from repro.models.layers import mlp
+
+        sg = jax.nn.sigmoid(dense(p_local["shared_gate"], x2).astype(jnp.float32)).astype(x.dtype)
+        out = out + sg * mlp(p_local["shared"], x2, "swiglu")
+    return out.reshape(b, s, d), r.aux_loss

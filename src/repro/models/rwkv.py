@@ -1,0 +1,190 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention + channel mix.
+
+Implemented in the chunked linear-attention form: within a chunk the
+contribution is a masked (decay-weighted) quadratic product; across chunks a
+(H, K, V) state is carried by a lax.scan — same execution skeleton as the
+Mamba2 SSD block, which keeps both sub-quadratic archs on one roofline
+profile (MXU chunks + sequential state carry).
+
+Decode is an O(1) per-token state update (``RWKVCache``), making rwkv6 the
+second legitimate ``long_500k`` arch.
+
+Simplifications vs. the released Finch checkpoints (documented in
+DESIGN.md): token-shift mixes use a single learned interpolation per
+projection (the low-rank data-dependent shift LoRA is kept for the decay w
+only, which is the architecture's defining feature); bonus term u ("first
+token") is per-head-per-channel as in the paper.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+class RWKVCache(NamedTuple):
+    last_x_att: jnp.ndarray  # (B, D) previous token (attention mix)
+    last_x_ffn: jnp.ndarray  # (B, D) previous token (channel mix)
+    state: jnp.ndarray       # (B, H, K, V) wkv state
+
+
+def _dims(cfg: ModelConfig):
+    hd = cfg.rwkv_head_size
+    h = cfg.d_model // hd
+    return h, hd
+
+
+def rwkv6_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    h, hd = _dims(cfg)
+    lora = max(32, d // 32)
+    ks = jax.random.split(key, 12)
+    return {
+        "mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "wr": dense_init(ks[0], d, d),
+        "wk": dense_init(ks[1], d, d),
+        "wv": dense_init(ks[2], d, d),
+        "wg": dense_init(ks[3], d, d),
+        "wo": dense_init(ks[4], d, d),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": dense_init(ks[5], d, lora, scale=0.02),
+        "wB": dense_init(ks[6], lora, d, scale=0.02),
+        "u": jnp.zeros((h, hd), jnp.float32),  # per-head bonus
+        "ln_x": rmsnorm_init(d),
+        # channel mix
+        "mix_kc": jnp.full((d,), 0.5, jnp.float32),
+        "wk_c": dense_init(ks[7], d, cfg.d_ff),
+        "wv_c": dense_init(ks[8], cfg.d_ff, d),
+        "wr_c": dense_init(ks[9], d, d),
+    }
+
+
+def _token_shift(x, last):
+    """shift(x)[t] = x[t-1]; position 0 takes `last` (cache) or zeros."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def rwkv6_time_mix(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache: RWKVCache | None):
+    b, s, d = x.shape
+    h, hd = _dims(cfg)
+    last = cache.last_x_att if cache is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+
+    def mix(m):
+        return x + (xs - x) * p[m].astype(x.dtype)
+
+    r = dense(p["wr"], mix("mix_r")).reshape(b, s, h, hd)
+    k = dense(p["wk"], mix("mix_k")).reshape(b, s, h, hd)
+    v = dense(p["wv"], mix("mix_v")).reshape(b, s, h, hd)
+    g = jax.nn.silu(dense(p["wg"], mix("mix_r")))
+    # data-dependent decay (the Finch signature)
+    wx = mix("mix_w")
+    logw = p["w0"].astype(jnp.float32) + dense(
+        p["wB"], jnp.tanh(dense(p["wA"], wx))
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(logw)).reshape(b, s, h, hd)  # decay ∈ (0,1)
+    u = p["u"].astype(jnp.float32)
+
+    if cache is not None and s == 1:
+        st = cache.state  # (B,H,K,V)
+        kk, vv, rr = k[:, 0], v[:, 0], r[:, 0]
+        kv = jnp.einsum("bhk,bhv->bhkv", kk.astype(jnp.float32), vv.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", rr.astype(jnp.float32), st + u[None, :, :, None] * kv)
+        st = st * w[:, 0].astype(jnp.float32)[..., None] + kv
+        y = y.reshape(b, 1, d).astype(x.dtype)
+        out = dense(p["wo"], rmsnorm(p["ln_x"], y) * g)
+        return out, RWKVCache(x[:, -1, :], cache.last_x_ffn, st)
+
+    # ---- chunked scan over sequence ----
+    # Recurrence: y_t = r_t·(S_t + diag(u)·k_t v_tᵀ); S_{t+1} = diag(w_t)·S_t
+    # + k_t v_tᵀ.  With ℓ=log w and within-chunk cumsums, the decay between
+    # u<t factorizes: exp(cum_ex[t]−cum[u]) = exp(cum_ex[t])·exp(−cum[u]),
+    # so the intra-chunk product needs NO (t,u,K) tensor — two scaled
+    # (c,h·hd) operands and one matmul (MXU).  exp(−cum) is clamped; pairs
+    # that would need the clamp carry ≈0 weight (decay ≥ e^30).
+    c = min(cfg.ssm_chunk, s)
+    assert s % c == 0
+    nc = s // c
+    logdecay = (
+        -jnp.exp(logw).reshape(b, nc, c, h, hd).astype(jnp.float32)
+    )
+    cum = jnp.cumsum(logdecay, axis=2)   # inclusive: Σ_{j≤t} ℓ_j
+    cum_ex = cum - logdecay              # exclusive: Σ_{j<t} ℓ_j
+
+    rc = r.reshape(b, nc, c, h, hd).astype(jnp.float32)
+    kc = k.reshape(b, nc, c, h, hd).astype(jnp.float32)
+    vc = v.reshape(b, nc, c, h, hd).astype(jnp.float32)
+
+    r_dec = rc * jnp.exp(cum_ex)                          # r_t ⊙ e^{cum_ex[t]}
+    k_dec = kc * jnp.exp(jnp.clip(-cum, a_max=30.0))      # k_u ⊙ e^{−cum[u]}
+
+    mask_lt = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    att = jnp.einsum("bzthk,bzuhk->bztuh", r_dec, k_dec)
+    att = jnp.where(mask_lt[None, None, :, :, None], att, 0.0)
+    y_intra = jnp.einsum("bztuh,bzuhv->bzthv", att, vc)
+    # diagonal bonus term (u): r_t·(u ⊙ k_t) v_t
+    diag = jnp.einsum("bzthk,bzthk->bzth", rc, u[None, None, None] * kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk state carry
+    chunk_decay = jnp.exp(cum[:, :, -1])                  # (b,nc,h,hd)
+    tail = jnp.exp(cum[:, :, -1:, :, :] - cum)            # decay u→chunk end
+    dstate = jnp.einsum("bzuhk,bzuhv->bzhkv", kc * tail, vc)
+
+    st0 = cache.state if cache is not None else jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(st, inp):
+        cd, ds, rdz = inp  # (b,h,hd), (b,h,k,v), (b,c,h,hd)
+        y_int = jnp.einsum("bthk,bhkv->bthv", rdz, st)
+        st_new = st * cd[..., None] + ds
+        return st_new, y_int
+
+    st_fin, y_inter = jax.lax.scan(
+        step,
+        st0,
+        (
+            chunk_decay.transpose(1, 0, 2, 3),
+            dstate.transpose(1, 0, 2, 3, 4),
+            r_dec.transpose(1, 0, 2, 3, 4),
+        ),
+        # chunk scan stays ROLLED even under scan_unroll: its body is only
+        # the small state-carry einsums (the quadratic intra-chunk work is
+        # outside the scan), so the roofline under-count is a few % while
+        # unrolling 256 chunk steps would explode compile time.
+    )
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)
+    y = (y_intra + y_inter).reshape(b, s, d).astype(x.dtype)
+    out = dense(p["wo"], rmsnorm(p["ln_x"], y) * g)
+    new_cache = RWKVCache(x[:, -1, :], cache.last_x_ffn if cache is not None else jnp.zeros((b, d), x.dtype), st_fin) if cache is not None else None
+    return out, new_cache
+
+
+def rwkv6_channel_mix(p: Params, x: jnp.ndarray, cache: RWKVCache | None):
+    b, s, d = x.shape
+    last = cache.last_x_ffn if cache is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+    xk = x + (xs - x) * p["mix_kc"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(dense(p["wk_c"], xk)))
+    v = dense(p["wv_c"], k)
+    r = jax.nn.sigmoid(dense(p["wr_c"], xk).astype(jnp.float32)).astype(x.dtype)
+    out = r * v
+    new_cache = cache._replace(last_x_ffn=x[:, -1, :]) if cache is not None else None
+    return out, new_cache
+
+
+def make_rwkv_cache(cfg: ModelConfig, batch: int, dtype) -> RWKVCache:
+    h, hd = _dims(cfg)
+    return RWKVCache(
+        last_x_att=jnp.zeros((batch, cfg.d_model), dtype),
+        last_x_ffn=jnp.zeros((batch, cfg.d_model), dtype),
+        state=jnp.zeros((batch, h, hd, hd), jnp.float32),
+    )

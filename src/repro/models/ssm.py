@@ -1,0 +1,186 @@
+"""Mamba2 (SSD) block — the zamba2 backbone.
+
+Chunked state-space-duality formulation (Dao & Gu 2024): within a chunk the
+output is a masked quadratic attention-like product; across chunks a
+sequential (lax.scan) recurrence carries the (H, hd, N) state.  Chunk size
+is a config knob (``ssm_chunk``) — it trades the quadratic intra-chunk term
+against scan length, a first-class roofline lever on TPU (MXU-friendly
+chunks of 128/256).
+
+Decode path: single-token state update (O(1) per step) with conv-tail and
+SSM state carried in ``SSMCache`` — this is what makes zamba2 a legitimate
+``long_500k`` arch.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, d_inner + 2*N_groups*N) conv tail
+    state: jnp.ndarray  # (B, H, hd, N) SSM state
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d_inner // hd
+    n = cfg.ssm_state
+    return d_inner, h, hd, n
+
+
+def mamba2_init(key, cfg: ModelConfig) -> Params:
+    """Projections are split per component (z/x/B/C/dt) instead of one fused
+    in_proj so tensor parallelism can shard the d_inner-sized ones over the
+    'model' axis while the small state projections (B, C: n cols) and the
+    per-head dt stay cleanly shardable/replicated — the Megatron-style TP
+    layout for Mamba."""
+    d = cfg.d_model
+    d_inner, h, hd, n = _dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_z": dense_init(ks[0], d, d_inner),
+        "in_x": dense_init(ks[1], d, d_inner),
+        "in_B": dense_init(ks[2], d, n),
+        "in_C": dense_init(ks[3], d, n),
+        "in_dt": dense_init(ks[4], d, h),
+        "conv_x": jax.random.normal(ks[5], (cfg.ssm_conv, d_inner), jnp.float32) * 0.2,
+        "conv_x_b": jnp.zeros((d_inner,), jnp.float32),
+        "conv_B": jax.random.normal(ks[6], (cfg.ssm_conv, n), jnp.float32) * 0.2,
+        "conv_B_b": jnp.zeros((n,), jnp.float32),
+        "conv_C": jax.random.normal(ks[7], (cfg.ssm_conv, n), jnp.float32) * 0.2,
+        "conv_C_b": jnp.zeros((n,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, h, dtype=jnp.float32))),
+        "norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(ks[0], d_inner, d),
+    }
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, tail: jnp.ndarray | None):
+    """Depthwise causal conv1d, width K: (B,S,C) with optional carried tail
+    (B,K-1,C). Returns (out, new_tail)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([tail, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + xp[:, i : i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+    out = out + b.astype(xbc.dtype)
+    new_tail = xp[:, xp.shape[1] - (k - 1) :, :]
+    return jax.nn.silu(out), new_tail
+
+
+def mamba2_block(p: Params, cfg: ModelConfig, x: jnp.ndarray, cache: SSMCache | None = None):
+    """(B, S, D) → (B, S, D). Train/prefill uses the chunked SSD scan;
+    S==1 with cache uses the O(1) decode update."""
+    b, s, d = x.shape
+    d_inner, h, hd, n = _dims(cfg)
+
+    z = dense(p["in_z"], x)
+    xr = dense(p["in_x"], x)
+    braw = dense(p["in_B"], x)
+    craw = dense(p["in_C"], x)
+    dt = dense(p["in_dt"], x)
+    tails = cache.conv if cache is not None else None
+
+    def tail_slice(lo, hi):
+        return tails[:, :, lo:hi] if tails is not None else None
+
+    xr, t_x = _causal_conv(xr, p["conv_x"], p["conv_x_b"], tail_slice(0, d_inner))
+    bmat, t_b = _causal_conv(braw, p["conv_B"], p["conv_B_b"], tail_slice(d_inner, d_inner + n))
+    cmat, t_c = _causal_conv(craw, p["conv_C"], p["conv_C_b"], tail_slice(d_inner + n, d_inner + 2 * n))
+    new_tail = jnp.concatenate([t_x, t_b, t_c], axis=-1)
+    xh = xr.reshape(b, s, h, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                      # (H,)
+    da = dt * a  # (B,S,H) log-decay per step
+    dbx = jnp.einsum("bsh,bsn,bshd->bshdn", dt.astype(x.dtype), bmat, xh)
+
+    if cache is not None and s == 1:
+        # decode: state ← exp(da)·state + dt·B⊗x ; y = C·state + D·x
+        st = cache.state * jnp.exp(da)[:, 0, :, None, None].astype(cache.state.dtype)
+        st = st + dbx[:, 0].astype(cache.state.dtype)
+        y = jnp.einsum("bhdn,bn->bhd", st, cmat[:, 0]) + p["D"].astype(x.dtype)[None, :, None] * xh[:, 0]
+        y = y.reshape(b, 1, d_inner).astype(x.dtype)
+        out = dense(p["out_proj"], rmsnorm(p["norm"], y * jax.nn.silu(z)))
+        return out, SSMCache(new_tail, st)
+
+    # ---- chunked SSD ----
+    c = min(cfg.ssm_chunk, s)
+    assert s % c == 0, f"seq {s} not divisible by chunk {c}"
+    nc = s // c
+    dac = da.reshape(b, nc, c, h)
+    cum = jnp.cumsum(dac, axis=2)                     # within-chunk cumulative decay
+    xc = xh.reshape(b, nc, c, h, hd)
+    bc_ = bmat.reshape(b, nc, c, n)
+    cc_ = cmat.reshape(b, nc, c, n)
+    dtc = dt.reshape(b, nc, c, h)
+
+    # intra-chunk (quadratic in c): y_intra[t] = Σ_{u≤t} C_t·B_u exp(cum_t-cum_u) dt_u x_u
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (b,nc,t,u,h)
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    scores = jnp.einsum("bztn,bzun->bztu", cc_, bc_)[..., None] * jnp.where(
+        mask[None, None, :, :, None], decay, 0.0
+    )  # (b,nc,t,u,h)
+    y_intra = jnp.einsum("bztuh,bzuh,bzuhd->bzthd", scores.astype(x.dtype), dtc.astype(x.dtype), xc)
+
+    # inter-chunk: carry state with a scan over chunks
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (b,nc,h) total decay of chunk
+    # state contribution of chunk z: Σ_u exp(cum_last - cum_u) dt_u B_u x_u
+    tail_decay = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,c,h)
+    dstate = jnp.einsum(
+        "bzch,bzcn,bzchd->bzhdn",
+        (dtc * tail_decay).astype(x.dtype), bc_, xc,
+    )
+
+    if cache is not None:
+        st0 = cache.state
+    else:
+        st0 = jnp.zeros((b, h, hd, n), jnp.float32)
+
+    def chunk_step(st, inp):
+        cd, ds, cseq, cumz = inp  # (b,h), (b,h,hd,n), (b,c,n), (b,c,h)
+        # y_inter[t] = C_t · (exp(cum_t) ⊙ st)
+        y_int = jnp.einsum("bcn,bch,bhdn->bchd", cseq, jnp.exp(cumz).astype(cseq.dtype), st.astype(cseq.dtype))
+        st_new = st * cd[:, :, None, None].astype(st.dtype) + ds.astype(st.dtype)
+        return st_new, y_int
+
+    st_fin, y_inter = jax.lax.scan(
+        chunk_step,
+        st0,
+        (
+            chunk_decay.transpose(1, 0, 2),
+            dstate.transpose(1, 0, 2, 3, 4),
+            cc_.transpose(1, 0, 2, 3),
+            cum.transpose(1, 0, 2, 3),
+        ),
+        # chunk scan stays ROLLED even under scan_unroll: its body is only
+        # the small state-carry einsums (the quadratic intra-chunk work is
+        # outside the scan), so the roofline under-count is a few % while
+        # unrolling 256 chunk steps would explode compile time.
+    )
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # (b,nc,c,h,hd)
+    y = (y_intra + y_inter.astype(x.dtype)).reshape(b, s, h, hd)
+    y = y + p["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner)
+    out = dense(p["out_proj"], rmsnorm(p["norm"], y * jax.nn.silu(z)))
+    new_cache = SSMCache(new_tail, st_fin) if cache is not None else None
+    return out, new_cache
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    d_inner, h, hd, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, h, hd, n), jnp.float32),
+    )

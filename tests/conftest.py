@@ -1,0 +1,22 @@
+import os
+import sys
+
+import pytest
+
+# tests must see exactly ONE device (the dry-run forces 512 in its own
+# process); make sure nothing leaks XLA_FLAGS into the test env
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Free compiled executables between test modules — the suite compiles
+    hundreds of programs and the single-process LLVM JIT heap otherwise OOMs
+    near the end of the run."""
+    import jax
+
+    jax.clear_caches()
+    yield

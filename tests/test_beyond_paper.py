@@ -1,0 +1,81 @@
+"""Tests for the beyond-paper extensions: the fused ticket+update kernel
+and the §6-future-work hybrid (register + concurrent) aggregation."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import groupby_oracle
+from repro.core.hybrid import detect_heavy_hitters, hybrid_groupby
+from repro.kernels.fused_groupby import fused_groupby_pallas
+
+RNG = np.random.default_rng(9)
+
+
+def as_map(keys, vals, n):
+    return {int(k): float(v) for k, v in zip(np.asarray(keys)[:n], np.asarray(vals)[:n])}
+
+
+@pytest.mark.parametrize("kind", ["sum", "count", "min", "max"])
+def test_fused_kernel_matches_oracle(kind):
+    keys = RNG.integers(0, 300, size=4096).astype(np.uint32)
+    vals = RNG.normal(size=4096).astype(np.float32)
+    kbt, acc, cnt = fused_groupby_pallas(
+        jnp.asarray(keys), jnp.asarray(vals), capacity=1024, max_groups=512,
+        kind=kind, morsel_size=512,
+    )
+    ref = groupby_oracle(jnp.asarray(keys), jnp.asarray(vals), kind=kind, max_groups=512)
+    got = as_map(kbt, acc, int(cnt))
+    want = as_map(ref.keys, ref.values, int(ref.num_groups))
+    assert got.keys() == want.keys()
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-2, (kind, k)
+
+
+def test_fused_kernel_matches_two_phase():
+    """Fused must agree with the two-kernel pipeline bit-for-bit on tickets
+    (same protocol) and allclose on aggregates."""
+    from repro.kernels.ops import groupby_pallas
+
+    keys = RNG.integers(0, 200, size=2048).astype(np.uint32)
+    vals = RNG.normal(size=2048).astype(np.float32)
+    kbt_f, acc_f, cnt_f = fused_groupby_pallas(
+        jnp.asarray(keys), jnp.asarray(vals), capacity=512, max_groups=256,
+        kind="sum", morsel_size=512,
+    )
+    kbt_2, acc_2, cnt_2 = groupby_pallas(
+        jnp.asarray(keys), jnp.asarray(vals), kind="sum", max_groups=256,
+        capacity=512, morsel_size=512,
+    )
+    assert int(cnt_f) == int(cnt_2)
+    assert np.array_equal(np.asarray(kbt_f)[: int(cnt_f)], np.asarray(kbt_2)[: int(cnt_2)])
+    np.testing.assert_allclose(np.asarray(acc_f), np.asarray(acc_2), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("kind", ["sum", "count", "min", "max"])
+def test_hybrid_matches_oracle_heavy_hitter(kind):
+    n = 8192
+    keys = RNG.integers(0, 500, size=n).astype(np.uint32)
+    keys[: n // 2] = 7  # 50% heavy hitter (the paper's worst corner)
+    keys[n // 2 : n // 2 + n // 4] = 13
+    vals = RNG.normal(size=n).astype(np.float32)
+    heavy = detect_heavy_hitters(jnp.asarray(keys), num_registers=8)
+    assert 7 in heavy and 13 in heavy
+    res = hybrid_groupby(jnp.asarray(keys), jnp.asarray(vals), jnp.asarray(heavy),
+                         kind=kind, max_groups=1024)
+    ref = groupby_oracle(jnp.asarray(keys), jnp.asarray(vals), kind=kind, max_groups=1024)
+    got = as_map(res.keys, res.values, int(res.num_groups))
+    want = as_map(ref.keys, ref.values, int(ref.num_groups))
+    assert got.keys() == want.keys()
+    for k in want:
+        assert abs(got[k] - want[k]) < 5e-2, (kind, k, got[k], want[k])
+
+
+def test_hybrid_no_heavy_hitters_degrades_gracefully():
+    keys = RNG.permutation(2048).astype(np.uint32)  # unique keys, no hitters
+    heavy = detect_heavy_hitters(jnp.asarray(keys), num_registers=8)
+    assert (heavy == np.uint32(0xFFFFFFFF)).all()  # nothing above 1%
+    res = hybrid_groupby(jnp.asarray(keys), None, jnp.asarray(heavy),
+                         kind="count", max_groups=4096)
+    assert int(res.num_groups) == 2048
+    n = int(res.num_groups)
+    assert float(np.asarray(res.values)[:n].sum()) == 2048.0

@@ -1,0 +1,141 @@
+"""Core aggregation library vs. the sorted-group-by oracle."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    EMPTY_KEY,
+    concurrent_groupby,
+    get_or_insert,
+    groupby_oracle,
+    lookup,
+    make_table,
+    migrate,
+    partitioned_groupby,
+    sort_ticketing,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def as_map(res):
+    ks = np.asarray(res.keys)
+    vs = np.asarray(res.values)
+    n = int(res.num_groups)
+    return {int(k): float(v) for k, v in zip(ks[:n], vs[:n])}
+
+
+@pytest.fixture(scope="module")
+def data():
+    keys = RNG.integers(0, 50, size=512).astype(np.uint32)
+    vals = RNG.normal(size=512).astype(np.float32)
+    return jnp.asarray(keys), jnp.asarray(vals), keys, vals
+
+
+def test_ticketing_bijective_dense(data):
+    kj, _, keys, _ = data
+    table = make_table(256)
+    t1, table = get_or_insert(table, kj)
+    tick_of = {}
+    for k, t in zip(keys, np.asarray(t1)):
+        assert t >= 0
+        assert tick_of.setdefault(int(k), int(t)) == int(t)
+    uniq = len(np.unique(keys))
+    assert int(table.count) == uniq
+    assert sorted(set(tick_of.values())) == list(range(uniq)), "tickets not dense"
+
+
+def test_lookup_matches_insert(data):
+    kj, _, _, _ = data
+    table = make_table(256)
+    t1, table = get_or_insert(table, kj)
+    t2 = lookup(table, kj)
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_lookup_missing_returns_minus1():
+    table = make_table(64)
+    _, table = get_or_insert(table, jnp.asarray([1, 2, 3], jnp.uint32))
+    out = lookup(table, jnp.asarray([4, 5], jnp.uint32))
+    assert np.array_equal(np.asarray(out), [-1, -1])
+
+
+def test_key_by_ticket_materialization(data):
+    kj, _, keys, _ = data
+    table = make_table(256)
+    t1, table = get_or_insert(table, kj)
+    kbt = np.asarray(table.key_by_ticket)
+    for k, t in zip(keys, np.asarray(t1)):
+        assert kbt[t] == k
+
+
+def test_empty_key_skipped():
+    keys = jnp.asarray([1, int(EMPTY_KEY), 2], jnp.uint32)
+    table = make_table(64)
+    t, table = get_or_insert(table, keys)
+    assert np.asarray(t)[1] == -1
+    assert int(table.count) == 2
+
+
+@pytest.mark.parametrize("kind", ["count", "sum", "min", "max"])
+@pytest.mark.parametrize("update", ["scatter", "onehot", "sort_segment", "serialized"])
+def test_concurrent_matches_oracle(data, kind, update):
+    kj, vj, _, _ = data
+    ref = as_map(groupby_oracle(kj, vj, kind=kind, max_groups=64))
+    got = as_map(concurrent_groupby(kj, vj, kind=kind, update=update, max_groups=64))
+    assert ref.keys() == got.keys()
+    for k in ref:
+        assert abs(ref[k] - got[k]) < 1e-3
+
+
+@pytest.mark.parametrize("kind", ["count", "sum", "min", "max"])
+def test_partitioned_matches_oracle(data, kind):
+    kj, vj, _, _ = data
+    ref = as_map(groupby_oracle(kj, vj, kind=kind, max_groups=64))
+    got = as_map(
+        partitioned_groupby(kj, vj, kind=kind, max_groups=64, num_workers=8,
+                            preagg_capacity=64)
+    )
+    assert ref.keys() == got.keys()
+    for k in ref:
+        assert abs(ref[k] - got[k]) < 1e-3
+
+
+def test_morselized_equals_single_shot(data):
+    kj, vj, _, _ = data
+    a = as_map(concurrent_groupby(kj, vj, kind="sum", max_groups=64))
+    b = as_map(concurrent_groupby(kj, vj, kind="sum", max_groups=64, morsel_size=64))
+    assert a.keys() == b.keys()
+    for k in a:
+        assert abs(a[k] - b[k]) < 1e-3
+
+
+def test_resize_preserves_ticket_map(data):
+    kj, _, _, _ = data
+    table = make_table(256)
+    t1, table = get_or_insert(table, kj)
+    big = migrate(table, 1024)
+    t2 = lookup(big, kj)
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+    assert int(big.count) == int(table.count)
+
+
+def test_heavy_hitter_and_skew():
+    keys = RNG.integers(0, 1000, size=4096).astype(np.uint32)
+    keys[: 2048] = 7  # 50% heavy hitter
+    vals = RNG.normal(size=4096).astype(np.float32)
+    ref = as_map(groupby_oracle(jnp.asarray(keys), jnp.asarray(vals), kind="sum", max_groups=2048))
+    got = as_map(concurrent_groupby(jnp.asarray(keys), jnp.asarray(vals), kind="sum",
+                                    update="scatter", max_groups=2048))
+    assert ref.keys() == got.keys()
+    for k in ref:
+        assert abs(ref[k] - got[k]) < 5e-2
+
+
+def test_sort_ticketing_dense():
+    keys = RNG.integers(0, 100, size=777).astype(np.uint32)
+    t, kbt, cnt = sort_ticketing(jnp.asarray(keys))
+    uniq = len(np.unique(keys))
+    assert int(cnt) == uniq
+    t = np.asarray(t)
+    assert t.min() == 0 and t.max() == uniq - 1

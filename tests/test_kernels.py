@@ -1,0 +1,93 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import groupby_oracle
+from repro.kernels.ops import groupby_pallas, multi_block_ticket, segment_aggregate, ticket
+from repro.kernels.ref import segment_agg_ref, sort_ticket_ref, ticket_hash_ref
+
+RNG = np.random.default_rng(1)
+
+
+@pytest.mark.parametrize("n,morsel,card", [
+    (1024, 256, 64),
+    (2048, 512, 500),
+    (4096, 1024, 4096),   # unique-ish
+    (1024, 1024, 8),      # single morsel, tiny cardinality
+])
+def test_ticket_kernel_bit_identical(n, morsel, card):
+    keys = RNG.integers(0, card, size=n).astype(np.uint32)
+    cap = 1 << (2 * card - 1).bit_length()
+    t_k, kbt_k, cnt_k = ticket(jnp.asarray(keys), capacity=cap, max_groups=cap // 2,
+                               morsel_size=morsel)
+    t_r, kbt_r, cnt_r = ticket_hash_ref(jnp.asarray(keys), capacity=cap,
+                                        max_groups=cap // 2, morsel_size=morsel)
+    assert int(cnt_k) == int(cnt_r) == len(np.unique(keys))
+    assert np.array_equal(np.asarray(t_k), np.asarray(t_r))
+    assert np.array_equal(np.asarray(kbt_k)[: int(cnt_k)], np.asarray(kbt_r)[: int(cnt_r)])
+
+
+def test_ticket_kernel_heavy_hitter():
+    keys = RNG.integers(0, 300, size=2048).astype(np.uint32)
+    keys[:1024] = 7
+    t_k, _, cnt = ticket(jnp.asarray(keys), capacity=1024, max_groups=512, morsel_size=512)
+    m = {}
+    for k, t in zip(keys, np.asarray(t_k)):
+        assert m.setdefault(int(k), int(t)) == int(t)
+    assert int(cnt) == len(np.unique(keys))
+
+
+@pytest.mark.parametrize("kind", ["sum", "count", "min", "max"])
+@pytest.mark.parametrize("strategy", ["scatter", "onehot"])
+def test_segment_kernel_matches_ref(kind, strategy):
+    n, g = 2048, 300
+    tickets = jnp.asarray(RNG.integers(-1, g, size=n).astype(np.int32))
+    vals = jnp.asarray(RNG.normal(size=n).astype(np.float32))
+    a_k = segment_aggregate(tickets, vals, num_groups=g, kind=kind,
+                            strategy=strategy, morsel_size=512)
+    a_r = segment_agg_ref(tickets, vals, num_groups=g, kind=kind)
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_r), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_segment_kernel_dtypes(dtype):
+    n, g = 1024, 100
+    tickets = jnp.asarray(RNG.integers(0, g, size=n).astype(np.int32))
+    vals = jnp.asarray(RNG.normal(size=n).astype(dtype))
+    a_k = segment_aggregate(tickets, vals, num_groups=g, kind="sum", morsel_size=256)
+    a_r = segment_agg_ref(tickets, vals, num_groups=g, kind="sum")
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_r), rtol=2e-3, atol=2e-3)
+
+
+def test_groupby_pallas_end_to_end():
+    keys = RNG.integers(0, 400, size=4096).astype(np.uint32)
+    vals = RNG.normal(size=4096).astype(np.float32)
+    kbt, acc, cnt = groupby_pallas(jnp.asarray(keys), jnp.asarray(vals), kind="sum",
+                                   max_groups=512, morsel_size=512)
+    ref = groupby_oracle(jnp.asarray(keys), jnp.asarray(vals), kind="sum", max_groups=512)
+    got = {int(k): float(v) for k, v in zip(np.asarray(kbt)[: int(cnt)], np.asarray(acc)[: int(cnt)])}
+    want = {int(k): float(v) for k, v in
+            zip(np.asarray(ref.keys)[: int(ref.num_groups)], np.asarray(ref.values)[: int(ref.num_groups)])}
+    assert got.keys() == want.keys()
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-2
+
+
+def test_multi_block_ticket_consistent():
+    keys = RNG.integers(0, 3000, size=4096).astype(np.uint32)
+    tb, _, _ = multi_block_ticket(jnp.asarray(keys), blocks=4, capacity_per_block=2048,
+                                  max_groups_per_block=1024, morsel_size=1024)
+    tb = np.asarray(tb)
+    m = {}
+    for k, t in zip(keys, tb):
+        assert t >= 0
+        assert m.setdefault(int(k), int(t)) == int(t)
+    assert len(set(m.values())) == len(np.unique(keys))
+
+
+def test_padding_is_noop():
+    keys = RNG.integers(0, 100, size=1000).astype(np.uint32)  # 1000 % 256 != 0
+    t, kbt, cnt = ticket(jnp.asarray(keys), capacity=512, max_groups=256, morsel_size=256)
+    assert t.shape == (1000,)
+    assert int(cnt) == len(np.unique(keys))

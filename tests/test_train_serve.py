@@ -1,0 +1,103 @@
+"""Training-loop, checkpointing and serving integration tests."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.serve.engine import Request, ServeLoop
+from repro.train.loop import TrainHParams, make_train_step, train_loop
+
+
+def test_loss_decreases_tiny_model():
+    cfg = get_config("qwen3_0_6b", reduced=True)
+    hp = TrainHParams(peak_lr=3e-3, warmup=5, total_steps=100, ticketed_embedding=True)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    step = jax.jit(make_train_step(cfg, hp))
+    data = iter(SyntheticLM(cfg, batch=4, seq=64, track_stats=False))
+    losses = []
+    batch = next(data)
+    for i in range(25):
+        params, opt, m = step(params, opt, batch)  # overfit one batch
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0] * 0.8, losses[::6]
+
+
+def test_data_pipeline_tracks_token_stats():
+    cfg = get_config("qwen3_0_6b", reduced=True)
+    pipe = SyntheticLM(cfg, batch=4, seq=128, track_stats=True, stat_groups=512)
+    it = iter(pipe)
+    for _ in range(3):
+        next(it)
+    toks, counts = pipe.token_stats()
+    assert toks.size > 0
+    # Zipf ⇒ token 0 is the heaviest tracked hitter
+    assert counts.max() == counts[list(toks).index(0)]
+    # counts bounded by total tokens seen
+    assert counts.sum() <= 3 * 4 * 128
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg = get_config("qwen3_0_6b", reduced=True)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init(params)
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    mgr.save(5, params, opt)
+    mgr.save(10, params, opt)
+    mgr.save(15, params, opt)  # gc should drop step 5
+    assert mgr.latest_step() == 15
+    assert not os.path.exists(os.path.join(str(tmp_path), "step_00000005"))
+    p2, o2, step = mgr.restore_latest(params, opt)
+    assert step == 15
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomic_commit(tmp_path):
+    """A temp dir from a 'crashed' save must not be visible as a commit."""
+    cfg = get_config("qwen3_0_6b", reduced=True)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_step_99"))  # simulated crash
+    mgr.save(1, params)
+    assert mgr.latest_step() == 1
+
+
+def test_train_loop_resumes_from_checkpoint(tmp_path):
+    cfg = get_config("qwen3_0_6b", reduced=True)
+    hp = TrainHParams(peak_lr=1e-3, warmup=2, total_steps=50, ticketed_embedding=False)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    data = SyntheticLM(cfg, batch=2, seq=32, track_stats=False)
+    train_loop(mesh, cfg, hp, iter(data), steps=4, checkpoint_manager=mgr,
+               checkpoint_every=2, log_every=100)
+    assert mgr.latest_step() == 4
+    # resume: runs steps 5..6 starting from the commit
+    params2, opt2, hist = train_loop(
+        mesh, cfg, hp, iter(data), steps=6, checkpoint_manager=mgr,
+        checkpoint_every=2, log_every=100,
+    )
+    assert int(opt2.step) == 6
+
+
+def test_serve_loop_greedy_generation():
+    cfg = get_config("qwen3_0_6b", reduced=True)
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    loop = ServeLoop(mesh, cfg, params, slots=2, max_len=64)
+    reqs = [
+        Request(uid=0, prompt=jnp.asarray([5, 6, 7], jnp.int32), max_new=4),
+        Request(uid=1, prompt=jnp.asarray([9, 3], jnp.int32), max_new=4),
+    ]
+    done = loop.run_batch(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.generated) == 4 for r in done)
+    assert all(0 <= t < cfg.vocab_size for r in done for t in r.generated)
