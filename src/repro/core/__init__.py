@@ -23,13 +23,16 @@ from repro.core.ticketing import (
 )
 from repro.core.updates import (
     UPDATE_FNS,
+    AggState,
     finalize,
     get_update_fn,
     init_acc,
+    init_agg_state,
     onehot_update,
     scatter_update,
     serialized_update,
     sort_segment_update,
+    update_agg_state,
 )
 
 __all__ = [
@@ -53,9 +56,12 @@ __all__ = [
     "maybe_resize",
     "migrate",
     "UPDATE_FNS",
+    "AggState",
     "finalize",
     "get_update_fn",
     "init_acc",
+    "init_agg_state",
+    "update_agg_state",
     "onehot_update",
     "scatter_update",
     "serialized_update",

@@ -86,6 +86,12 @@ def sample_stats(keys: jnp.ndarray, sample: int = 4096, domain: int | None = Non
     u = int(uniq.size)
     top = float(counts.max()) / float(valid.size)
     # scale-up: if the sample saw mostly-unique keys, extrapolate linearly;
-    # if it saw heavy repetition, the sample cardinality is ≈ the truth.
-    est = int(min(u * flat.shape[0] / valid.size, flat.shape[0])) if u > 0.5 * valid.size else u * 2
-    return WorkloadStats(int(flat.shape[0]), max(est, u), top, domain)
+    # if it saw heavy repetition, the sample cardinality is ≈ the truth
+    # (each distinct key recurs within the sample, so unseen keys are rare
+    # — anchor the estimate at u instead of inflating it).
+    if u > 0.5 * valid.size:
+        est = int(min(u * flat.shape[0] / valid.size, flat.shape[0]))
+    else:
+        est = u
+    est = min(max(est, u), int(flat.shape[0]))  # never below u, never above n
+    return WorkloadStats(int(flat.shape[0]), est, top, domain)

@@ -43,6 +43,7 @@ from repro.core import updates as up
 from repro.core.aggregation import GroupByResult
 from repro.core.hashing import EMPTY_KEY, slot_hash
 from repro.core.partitioned import make_preagg, preagg_morsel
+from repro.parallel.sharding import shard_map
 
 
 def concurrent_groupby_sharded(
@@ -114,7 +115,7 @@ def concurrent_groupby_sharded(
         return gacc, gtable.key_by_ticket, gtable.count
 
     vals = values if values is not None else jnp.ones_like(keys, dtype=jnp.float32)
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
@@ -200,7 +201,7 @@ def partitioned_groupby_sharded(
         )
 
     vals = values if values is not None else jnp.ones_like(keys, dtype=jnp.float32)
-    fn = jax.shard_map(
+    fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),

@@ -10,9 +10,14 @@ preserved exactly (property-tested).
 
 Growth policy mirrors the paper: grow when live entries exceed
 ``load_factor * capacity`` (default 0.5 — past that, linear probing's
-cluster lengths blow up).  ``maybe_resize`` is the jit-unfriendly host-side
-wrapper used by the engine between morsels; ``migrate`` itself is jittable
-for a fixed (old, new) capacity pair.
+cluster lengths blow up).  ``migrate`` is jittable for a fixed (old, new)
+capacity pair and is what the scan-compiled engine calls when the consume
+scan pauses on its in-scan growth flag (engine/groupby.py): the scan
+records the pause morsel, the host migrates here, and the scan resumes at
+that morsel — the paper's §4.4 "pause, migrate, resume" with the pause
+hoisted out of the hot loop.  ``maybe_resize`` is the legacy host-side
+per-morsel check (one blocking ``int(table.count)`` device sync per call);
+it survives for the reference host-loop pipeline and for library users.
 """
 from __future__ import annotations
 
@@ -57,21 +62,18 @@ def migrate(table: tk.TicketTable, new_capacity: int) -> tk.TicketTable:
         empty = active & (probed == 0)
         taken = active & (probed != 0)
         slot2 = jnp.where(taken, (slot + 1) & mask, slot)
-        claim_slot = jnp.where(empty, slot, new_capacity)
-        claims = jnp.full((new_capacity + 1,), n, jnp.int32).at[claim_slot].min(lane)
+        claim_slot = jnp.where(empty, slot, new_capacity)  # OOB park → dropped
+        claims = jnp.full((new_capacity,), n, jnp.int32).at[claim_slot].min(lane, mode="drop")
         won = empty & (jnp.take(claims, slot) == lane)
         pub = jnp.where(won, slot, new_capacity)
-        nk = jnp.concatenate([nk, jnp.full((1,), EMPTY_KEY, jnp.uint32)]).at[pub].set(keys)[:new_capacity]
-        nt = jnp.concatenate([nt, jnp.zeros((1,), jnp.int32)]).at[pub].set(old_tickets)[:new_capacity]
+        nk = nk.at[pub].set(keys, mode="drop")
+        nt = nt.at[pub].set(old_tickets, mode="drop")
         return nk, nt, slot2, active & ~won
 
     nk, nt, _, _ = jax.lax.while_loop(cond, body, (nk, nt, slot, live))
-    kbt = table.key_by_ticket
-    if kbt.shape[0] < new_capacity:
-        kbt = jnp.concatenate(
-            [kbt, jnp.full((new_capacity - kbt.shape[0],), EMPTY_KEY, jnp.uint32)]
-        )
-    return tk.TicketTable(nk, nt, kbt, table.count)
+    # key_by_ticket length IS the max_groups contract — growing the probe
+    # table must not widen it, or the overflow check would silently relax.
+    return tk.TicketTable(nk, nt, table.key_by_ticket, table.count, table.overflowed)
 
 
 def maybe_resize(table: tk.TicketTable, load_factor: float = 0.5) -> tk.TicketTable:

@@ -42,12 +42,17 @@ class TicketTable(NamedTuple):
       key_by_ticket: (max_groups,) uint32 — keys in ticket order (the paper's
         ticket-ordered key copy used for materialization).
       count:   () int32 — number of tickets issued so far (next base).
+      overflowed: () bool — sticky: tickets were issued past ``max_groups``,
+        so their ``key_by_ticket`` (and any ticket-indexed accumulator)
+        scatters dropped.  Once set, materialized results are truncated and
+        the engine refuses to finalize.
     """
 
     keys: jnp.ndarray
     tickets: jnp.ndarray
     key_by_ticket: jnp.ndarray
     count: jnp.ndarray
+    overflowed: jnp.ndarray
 
     @property
     def capacity(self) -> int:
@@ -70,6 +75,7 @@ def make_table(capacity: int, max_groups: int | None = None) -> TicketTable:
         tickets=jnp.zeros((capacity,), dtype=jnp.int32),
         key_by_ticket=jnp.full((max_groups,), EMPTY_KEY, dtype=jnp.uint32),
         count=jnp.zeros((), dtype=jnp.int32),
+        overflowed=jnp.zeros((), dtype=jnp.bool_),
     )
 
 
@@ -87,22 +93,36 @@ def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0):
       * empty slot                       → claim round (CAS analogue);
     with the one TPU twist that claims from all lanes resolve simultaneously
     via scatter-min + readback instead of a per-lane CAS.
+
+    Scan-body safety: the probe loop is bounded, so the function terminates
+    even on a completely full table.  A lane that exhausts the bound (probe
+    table saturated — no reachable empty slot) returns ticket -1 *without*
+    having been inserted; callers detect this as ``(tickets < 0) & (keys !=
+    EMPTY_KEY)`` and recover by migrating to a bigger table and replaying the
+    morsel (inserts already published are idempotent under replay: the retry
+    takes the fast-path lookup and issues no new ticket).  Tickets issued
+    past ``max_groups`` set the sticky ``overflowed`` flag: their
+    ``key_by_ticket`` scatters dropped, so the table's materialization is
+    truncated and the engine refuses to finalize.
     """
     flat = keys.reshape(-1).astype(jnp.uint32)
     n = flat.shape[0]
     capacity = table.capacity
     mask = capacity - 1
     lane = jnp.arange(n, dtype=jnp.int32)
+    # One wrap of linear probing plus one claim round per possible winner —
+    # past this, remaining lanes provably face a saturated table.
+    max_rounds = 2 * capacity + 2
 
     valid = flat != EMPTY_KEY
     slot0 = slot_hash(flat, capacity, seed=seed)
 
     def cond(state):
-        _, _, _, _, active, _, _ = state
-        return jnp.any(active)
+        active, rounds = state[4], state[7]
+        return jnp.any(active) & (rounds < max_rounds)
 
     def body(state):
-        tkeys, ttks, kbt, slot, active, out, count = state
+        tkeys, ttks, kbt, slot, active, out, count, rounds = state
         probed_key = jnp.take(tkeys, slot)
         probed_tk = jnp.take(ttks, slot)
 
@@ -120,10 +140,12 @@ def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0):
         slot = jnp.where(collide, (slot + 1) & mask, slot)
 
         # Claim round on empty slots: scatter-min of lane id, readback votes.
+        # Non-claiming lanes park on an out-of-bounds index; mode="drop"
+        # makes their scatter a true no-op (same idiom as the Pallas kernel).
         trying = active & (probed_tk == 0)
-        claim_slot = jnp.where(trying, slot, capacity)  # park inactive lanes
-        claims = jnp.full((capacity + 1,), n, dtype=jnp.int32)
-        claims = claims.at[claim_slot].min(lane)
+        claim_slot = jnp.where(trying, slot, capacity)
+        claims = jnp.full((capacity,), n, dtype=jnp.int32)
+        claims = claims.at[claim_slot].min(lane, mode="drop")
         won = trying & (jnp.take(claims, slot) == lane)
 
         # Fuzzy-ticketer range for this round: base=count, winner ranks.
@@ -134,20 +156,18 @@ def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0):
         # Publish winners' (key, ticket); park losers for retry (they will
         # re-gather this slot next round and take the fast path on a match).
         pub_slot = jnp.where(won, slot, capacity)
-        tkeys = jnp.concatenate([tkeys, jnp.full((1,), EMPTY_KEY, jnp.uint32)])
-        tkeys = tkeys.at[pub_slot].set(flat)[:capacity]
-        ttks = jnp.concatenate([ttks, jnp.zeros((1,), jnp.int32)])
-        ttks = ttks.at[pub_slot].set(ticket_w)[:capacity]
+        tkeys = tkeys.at[pub_slot].set(flat, mode="drop")
+        ttks = ttks.at[pub_slot].set(ticket_w, mode="drop")
 
-        # Ticket-ordered key copy (materialization support).
+        # Ticket-ordered key copy (materialization support).  A winner whose
+        # ticket lands past max_groups is dropped here — detected below.
         kbt_idx = jnp.where(won, new_ticket - 1, kbt.shape[0])
-        kbt = jnp.concatenate([kbt, jnp.full((1,), EMPTY_KEY, jnp.uint32)])
-        kbt = kbt.at[kbt_idx].set(flat)[: kbt.shape[0] - 1]
+        kbt = kbt.at[kbt_idx].set(flat, mode="drop")
 
         out = jnp.where(won, new_ticket, out)
         active = active & ~won
         count = count + jnp.sum(won.astype(jnp.int32))
-        return tkeys, ttks, kbt, slot, active, out, count
+        return tkeys, ttks, kbt, slot, active, out, count, rounds + 1
 
     init = (
         table.keys,
@@ -157,10 +177,13 @@ def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0):
         valid,
         jnp.zeros((n,), dtype=jnp.int32),
         table.count,
+        jnp.zeros((), dtype=jnp.int32),
     )
-    tkeys, ttks, kbt, _, _, out, count = jax.lax.while_loop(cond, body, init)
-    tickets = jnp.where(valid, out - 1, -1).reshape(keys.shape)
-    return tickets, TicketTable(tkeys, ttks, kbt, count)
+    tkeys, ttks, kbt, _, _, out, count, _ = jax.lax.while_loop(cond, body, init)
+    # Unresolved lanes (saturated table) still have out == 0 → ticket -1.
+    tickets = jnp.where(valid & (out > 0), out - 1, -1).reshape(keys.shape)
+    overflowed = table.overflowed | (count > table.max_groups)
+    return tickets, TicketTable(tkeys, ttks, kbt, count, overflowed)
 
 
 def lookup(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0) -> jnp.ndarray:

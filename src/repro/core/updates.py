@@ -29,11 +29,18 @@ All update functions share the signature
 ``update(acc, tickets, values) -> acc`` with ``acc: (G,) or (G, V)`` and
 rows with ticket < 0 ignored.  ``kind`` ∈ {sum, count, min, max} — mean is
 (sum, count) composed by the caller.
+
+``AggState`` bundles every accumulator a GROUP BY query carries — one per
+``(column, kind)`` pair — into a registered pytree so the whole aggregation
+state threads through ``jax.lax.scan`` as a single carry leaf-group (the
+engine's scan-compiled consume pipeline).  The spec tuple is static pytree
+aux data; only the accumulator arrays are traced.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable
+from typing import Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +62,61 @@ def neutral(kind: Kind, dtype=jnp.float32):
 def init_acc(num_groups: int, kind: Kind, dtype=jnp.float32, width: int | None = None):
     shape = (num_groups,) if width is None else (num_groups, width)
     return jnp.full(shape, neutral(kind, dtype), dtype=dtype)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AggState:
+    """Pytree of per-``(column, kind)`` accumulators for one GROUP BY query.
+
+    Attributes:
+      specs: static tuple of ``(column | None, kind)`` pairs, deduplicated,
+        in declaration order (``mean`` callers register sum+count).
+      accs:  tuple of ``(num_groups,)`` float32 accumulators, aligned with
+        ``specs``.
+    """
+
+    specs: tuple
+    accs: tuple
+
+    def tree_flatten(self):
+        return self.accs, self.specs
+
+    @classmethod
+    def tree_unflatten(cls, specs, accs):
+        return cls(specs, tuple(accs))
+
+    @property
+    def num_groups(self) -> int:
+        return self.accs[0].shape[0]
+
+    def get(self, column, kind: Kind) -> jnp.ndarray:
+        """Accumulator for one (column, kind) pair."""
+        return self.accs[self.specs.index((column, kind))]
+
+
+def init_agg_state(specs: Sequence[tuple], num_groups: int, dtype=jnp.float32) -> AggState:
+    """Allocate neutral accumulators for ``specs`` = [(column|None, kind), ...]."""
+    specs = tuple(dict.fromkeys((col, kind) for col, kind in specs))
+    assert specs, "at least one aggregate spec required"
+    return AggState(specs, tuple(init_acc(num_groups, k, dtype) for _, k in specs))
+
+
+def update_agg_state(
+    state: AggState,
+    tickets: jnp.ndarray,
+    values_by_column: Mapping[str, jnp.ndarray],
+    update_fn: Callable,
+) -> AggState:
+    """Fold one ticketed morsel into every accumulator (scan-body safe)."""
+    accs = []
+    for (col, kind), acc in zip(state.specs, state.accs):
+        if col is None:
+            vals = jnp.ones(tickets.shape, jnp.float32)
+        else:
+            vals = values_by_column[col]
+        accs.append(update_fn(acc, tickets, vals, kind=kind))
+    return AggState(state.specs, tuple(accs))
 
 
 def _masked(tickets, values, kind, num_groups):

@@ -1,6 +1,6 @@
 from repro.engine.columns import Table, combine_keys
-from repro.engine.groupby import AggSpec, GroupByOperator, groupby
-from repro.engine.morsels import DEFAULT_MORSEL_ROWS, pad_to_morsels
+from repro.engine.groupby import AggSpec, GroupByOperator, GroupByOverflowError, groupby
+from repro.engine.morsels import DEFAULT_MORSEL_ROWS, morselize_chunk
 from repro.engine.plans import Aggregate, Filter, Scan
 
 __all__ = [
@@ -8,9 +8,10 @@ __all__ = [
     "combine_keys",
     "AggSpec",
     "GroupByOperator",
+    "GroupByOverflowError",
     "groupby",
     "DEFAULT_MORSEL_ROWS",
-    "pad_to_morsels",
+    "morselize_chunk",
     "Aggregate",
     "Filter",
     "Scan",

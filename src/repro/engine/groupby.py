@@ -1,4 +1,4 @@
-"""The GROUP BY operator: morsel-driven, strategy-pluggable (paper Fig. 2).
+"""The GROUP BY operator: scan-compiled, morsel-driven, strategy-pluggable.
 
 This is the operator a query plan instantiates.  It supports:
   * multiple aggregates per query (SUM/COUNT/MIN/MAX/MEAN over value cols),
@@ -7,25 +7,59 @@ This is the operator a query plan instantiates.  It supports:
   * a resize path when the cardinality estimate was wrong (core/resize.py),
   * single-core (pure-jnp or Pallas-kernel) and mesh-distributed execution.
 
+Scan-compiled contract
+----------------------
+``consume`` is ONE jitted ``jax.lax.scan`` over the chunk's morsel axis,
+threading ``(TicketTable, AggState)`` as the carry — probe, claim, ticket,
+update all trace into a single compiled program, so per-morsel dispatch cost
+is zero and the hot loop stays device-resident (the paper's premise that the
+GROUP BY inner loop must be contention- and overhead-free).  The Pallas
+kernel route is just another scan body: ``use_kernel=True`` swaps the update
+stage for the VMEM segment-update kernel (kernels/ops.make_scan_update_fn).
+
+Resizing follows the paper's §4.4 "pause, migrate, resume" with the pause
+hoisted out of the hot loop: instead of a blocking ``int(table.count)`` host
+sync before every morsel, the scan itself checks the load factor before each
+morsel and *pauses* (subsequent morsels become no-ops) the moment growth is
+needed, recording the pause index in its per-morsel halt flags.  A thin host
+wrapper reads the flags once per chunk, migrates via ``resize.migrate``
+(tickets survive, so ticket-indexed accumulators are untouched), and replays
+only the affected suffix by re-entering the same compiled scan at the paused
+morsel.  A morsel that saturates the probe table mid-stream does not commit
+its accumulator updates and pauses the same way; replay after growth is
+exact because published inserts are idempotent (the retry takes the
+fast-path lookup and issues no new ticket).
+
 The operator conforms to the morsel-driven contract: it consumes morsels
 incrementally (``consume``) and produces its result only at ``finalize`` —
 i.e. it is a pipeline breaker exactly like the paper's (and every) hash
-aggregation.
+aggregation.  ``finalize`` raises if the stream's distinct keys overflowed
+``max_groups`` (truncated output would be silent data loss).
+
+``pipeline="host"`` keeps the legacy per-morsel Python loop (one eager
+dispatch + one blocking resize check per morsel) as the reference
+implementation for A/B equivalence tests and the pipeline benchmark.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+import functools
+from dataclasses import dataclass
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import adaptive, resize
 from repro.core import ticketing as tk
 from repro.core import updates as up
 from repro.core.hashing import EMPTY_KEY
 from repro.engine.columns import Table, combine_keys
-from repro.engine.morsels import DEFAULT_MORSEL_ROWS, pad_to_morsels
+from repro.engine.morsels import DEFAULT_MORSEL_ROWS, morselize_chunk
+
+
+class GroupByOverflowError(RuntimeError):
+    """The stream held more distinct keys than ``max_groups``."""
 
 
 @dataclass(frozen=True)
@@ -38,6 +72,49 @@ class AggSpec:
         return f"{self.kind}({self.column or '*'})"
 
 
+@functools.partial(jax.jit, static_argnames=("update_fn", "load_factor"))
+def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor):
+    """One fused pass over a chunk's morsels: scan (probe→ticket→update).
+
+    Morsels with index < ``start`` are skipped (resume support).  Before each
+    morsel the body checks the growth condition; at the first morsel that
+    needs growth (load factor crossed) or fails to fully ticket (probe table
+    saturated), the scan pauses: that morsel and everything after become
+    no-ops and its index is flagged in the returned per-morsel ``halts``.
+    """
+    capacity = table.capacity
+    threshold = int(load_factor * capacity)
+
+    def body(carry, xs):
+        table, state, halted = carry
+        idx, keys, vals = xs
+        wants = idx >= start
+        # Pre-morsel pause check — the host loop's maybe_resize, in-scan.
+        halt_grow = wants & ~halted & (table.count > threshold)
+        halted = halted | halt_grow
+        live = wants & ~halted
+        mkeys = jnp.where(live, keys, jnp.uint32(EMPTY_KEY))
+        tickets, table = tk.get_or_insert(table, mkeys)
+        # Saturation: a valid row came back unticketed (no reachable empty
+        # slot).  The morsel does not commit — its published inserts are
+        # idempotent under replay, and its updates are dropped below.
+        sat = jnp.any((tickets < 0) & (mkeys != jnp.uint32(EMPTY_KEY)))
+        new_state = up.update_agg_state(state, tickets, vals, update_fn)
+        commit = live & ~sat
+        state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(commit, new, old), new_state, state
+        )
+        halt_now = halt_grow | (live & sat)
+        halted = halted | halt_now
+        return (table, state, halted), halt_now
+
+    idxs = jnp.arange(km.shape[0], dtype=jnp.int32)
+    (table, state, _), halts = jax.lax.scan(
+        body, (table, state, jnp.zeros((), jnp.bool_)), (idxs, km, vm)
+    )
+    return table, state, halts
+
+
 @dataclass
 class GroupByOperator:
     key_columns: Sequence[str]
@@ -47,18 +124,28 @@ class GroupByOperator:
     update: str = "scatter"
     use_kernel: bool = False          # route updates through the Pallas kernels
     load_factor: float = 0.5
+    pipeline: str = "scan"            # scan (compiled) | host (reference loop)
 
     def __post_init__(self):
         cap = 16
         while cap < 2 * self.max_groups:
             cap *= 2
         self._table = tk.make_table(cap, max_groups=self.max_groups)
-        self._accs = {}
+        specs = []
         for a in self.aggs:
             kinds = ("sum", "count") if a.kind == "mean" else (a.kind,)
             for k in kinds:
-                self._accs.setdefault((a.column, k), up.init_acc(self.max_groups, k))
-        self._update_fn = up.get_update_fn(self.update)
+                specs.append((a.column, k))
+        self._state = up.init_agg_state(specs, self.max_groups)
+        if self.use_kernel:
+            from repro.kernels import ops as kops
+
+            strategy = self.update if self.update in ("scatter", "onehot") else "scatter"
+            self._update_fn = kops.make_scan_update_fn(strategy=strategy)
+        else:
+            self._update_fn = up.get_update_fn(self.update)
+        self._overflowed = False  # host mirror of table.overflowed
+        assert self.pipeline in ("scan", "host"), self.pipeline
 
     # -- morsel-driven contract ---------------------------------------------
     def consume(self, chunk: Table) -> None:
@@ -68,46 +155,82 @@ class GroupByOperator:
         (selection-vector idiom): their combined key becomes the EMPTY
         sentinel, which ticketing skips.
         """
+        if self._overflowed:
+            return  # poisoned: skip the scan, finalize raises anyway
         cols = dict(chunk.columns)
         mask = cols.pop("__mask__", None)
         keys = combine_keys(*(cols[c] for c in self.key_columns))
         if mask is not None:
             keys = jnp.where(mask, keys, jnp.uint32(EMPTY_KEY))
-        n = keys.shape[0]
-        # pad keys and every value column to morsel multiples together
-        km, _, num = pad_to_morsels(keys, None, self.morsel_rows)
-        padded_vals = {}
-        for col, _k in self._accs:
-            if col is not None and col not in padded_vals:
-                v = cols[col].astype(jnp.float32)
-                rem = (-n) % self.morsel_rows
-                if rem:
-                    v = jnp.concatenate([v, jnp.zeros((rem,), jnp.float32)])
-                padded_vals[col] = v.reshape(num, self.morsel_rows)
+        value_cols = sorted({c for c, _ in self._state.specs if c is not None})
+        km, vm, num = morselize_chunk(
+            keys, {c: cols[c] for c in value_cols}, self.morsel_rows
+        )
+        if self.pipeline == "host":
+            self._consume_host_loop(km, vm, num)
+            return
+        start = 0
+        while True:
+            table, state, halts = _consume_scan(
+                self._table, self._state, km, vm, jnp.int32(start),
+                update_fn=self._update_fn, load_factor=self.load_factor,
+            )
+            self._table, self._state = table, state
+            # one blocking round-trip per chunk for both control signals
+            overflowed, halts_np = jax.device_get((table.overflowed, halts))
+            if bool(overflowed):
+                self._overflowed = True
+                return  # poisoned: finalize raises instead of truncating
+            flagged = np.flatnonzero(halts_np)
+            if flagged.size == 0:
+                return
+            # Pause → migrate → resume (§4.4).  One device round-trip per
+            # growth event instead of one per morsel; accumulators are
+            # ticket-indexed so migration never touches them.
+            self._table = resize.migrate(self._table, 2 * self._table.capacity)
+            start = int(flagged[0])
+
+    def _consume_host_loop(self, km, vm, num) -> None:
+        """Reference pipeline (the pre-scan implementation): one eager Python
+        iteration per morsel with a blocking host-side resize check."""
         for i in range(num):
-            morsel_keys = km[i]
-            # resize check between morsels (paper §4.4: workers pause, the
-            # table migrates, tickets survive)
             self._table = resize.maybe_resize(self._table, self.load_factor)
-            tickets, self._table = tk.get_or_insert(self._table, morsel_keys)
-            for (col, kind), acc in self._accs.items():
-                if col is None:
-                    vals = jnp.ones((self.morsel_rows,), jnp.float32)
-                else:
-                    vals = padded_vals[col][i]
-                self._accs[(col, kind)] = self._update_fn(acc, tickets, vals, kind=kind)
+            tickets, self._table = tk.get_or_insert(self._table, km[i])
+            # Saturation recovery (bounded probe loop's ticket==-1 contract):
+            # migrate and replay the morsel, same as the scan path's pause.
+            while bool(
+                jax.device_get(jnp.any((tickets < 0) & (km[i] != jnp.uint32(EMPTY_KEY))))
+            ):
+                self._table = resize.migrate(self._table, 2 * self._table.capacity)
+                tickets, self._table = tk.get_or_insert(self._table, km[i])
+            self._state = up.update_agg_state(
+                self._state, tickets, {c: v[i] for c, v in vm.items()},
+                self._update_fn,
+            )
 
     def finalize(self) -> Table:
-        """Materialize: keys in ticket order + one column per aggregate."""
+        """Materialize: keys in ticket order + one column per aggregate.
+
+        Raises RuntimeError if the stream held more than ``max_groups``
+        distinct keys — tickets past the bound had their key/accumulator
+        scatters dropped, so a truncated result would be silent data loss.
+        """
+        if self._overflowed or bool(jax.device_get(self._table.overflowed)):
+            raise GroupByOverflowError(
+                f"GROUP BY overflow: {int(self._table.count)} distinct keys "
+                f"exceed max_groups={self.max_groups}; groups past the bound "
+                "were dropped. Re-run with a larger max_groups (or a better "
+                "cardinality estimate)."
+            )
         n = self._table.count
         out = {"key": self._table.key_by_ticket}
         for a in self.aggs:
             if a.kind == "mean":
-                s = self._accs[(a.column, "sum")]
-                c = self._accs[(a.column, "count")]
+                s = self._state.get(a.column, "sum")
+                c = self._state.get(a.column, "count")
                 out[a.name] = up.finalize("mean", s, c)
             else:
-                out[a.name] = up.finalize(a.kind, self._accs[(a.column, a.kind)])
+                out[a.name] = up.finalize(a.kind, self._state.get(a.column, a.kind))
         out["__num_groups__"] = jnp.broadcast_to(n, (self._table.max_groups,))
         return Table(out)
 
@@ -128,14 +251,29 @@ def groupby(
     """One-shot GROUP BY with adaptive strategy selection (paper's
     recommended optimizer integration: estimate → choose → run)."""
     keycol = combine_keys(*(table[c] for c in keys))
+    n = keycol.shape[0]
+    estimated = max_groups is None
     if max_groups is None or update is None:
         stats = adaptive.sample_stats(keycol)
         plan = adaptive.choose_plan(stats)
-        max_groups = max_groups or min(max(stats.est_groups * 2, 64), keycol.shape[0])
+        if max_groups is None:
+            # 2× headroom over the estimate, never above the row count
+            # (there cannot be more groups than rows), never below 1.
+            max_groups = max(1, min(max(stats.est_groups * 2, 64), n))
         update = update or plan.update
-    op = GroupByOperator(
-        key_columns=list(keys), aggs=list(aggs), max_groups=max_groups,
-        update=update, morsel_rows=morsel_rows,
-    )
-    op.consume(table)
-    return op.finalize()
+    while True:
+        op = GroupByOperator(
+            key_columns=list(keys), aggs=list(aggs), max_groups=max_groups,
+            update=update, morsel_rows=morsel_rows,
+        )
+        op.consume(table)
+        try:
+            return op.finalize()
+        except GroupByOverflowError:
+            # A sample estimate cannot see a long tail (e.g. zipf): when the
+            # bound was ours, not the caller's, grow it and re-run rather
+            # than surface an error about a parameter nobody passed.
+            # max_groups == n always suffices, so this terminates.
+            if not estimated or max_groups >= n:
+                raise
+            max_groups = min(max(4 * max_groups, 64), n)

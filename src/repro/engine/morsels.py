@@ -2,11 +2,15 @@
 
 Splits a column stream into fixed-size morsels (padding the tail with the
 EMPTY sentinel), the unit of vectorized execution throughout the engine and
-of the Pallas kernels' grid.  Dispatch order is host-controlled so the
-runtime can re-assign morsels (work stealing / straggler mitigation at the
-mesh level happens in train/elastic.py with the same mechanism).
+of the Pallas kernels' grid.  ``morselize_chunk`` produces the stacked
+``(num_morsels, morsel_rows)`` axes the scan-compiled consume pipeline scans
+over; dispatch order within a chunk is the scan order (work stealing /
+straggler mitigation at the mesh level happens in train/elastic.py with the
+same mechanism).
 """
 from __future__ import annotations
+
+from typing import Mapping
 
 import jax.numpy as jnp
 
@@ -15,14 +19,24 @@ from repro.core.hashing import EMPTY_KEY
 DEFAULT_MORSEL_ROWS = 4096
 
 
-def pad_to_morsels(keys: jnp.ndarray, values: jnp.ndarray | None, morsel_rows: int):
+def morselize_chunk(
+    keys: jnp.ndarray, values: Mapping[str, jnp.ndarray], morsel_rows: int
+):
+    """Pad a key column (EMPTY sentinel) and its value columns (zeros) to a
+    morsel multiple and stack them as ``(num_morsels, morsel_rows)`` — the
+    xs axes of the consume scan.  Padding rows carry the EMPTY key, which
+    ticketing maps to ticket -1, so every update strategy ignores them.
+    """
     n = keys.shape[0]
     rem = (-n) % morsel_rows
     if rem:
         keys = jnp.concatenate([keys, jnp.full((rem,), EMPTY_KEY, keys.dtype)])
-        if values is not None:
-            values = jnp.concatenate([values, jnp.zeros((rem,), values.dtype)])
     num = keys.shape[0] // morsel_rows
-    k = keys.reshape(num, morsel_rows)
-    v = values.reshape(num, morsel_rows) if values is not None else None
-    return k, v, num
+    km = keys.reshape(num, morsel_rows)
+    vm = {}
+    for col, v in values.items():
+        v = v.astype(jnp.float32)
+        if rem:
+            v = jnp.concatenate([v, jnp.zeros((rem,), jnp.float32)])
+        vm[col] = v.reshape(num, morsel_rows)
+    return km, vm, num

@@ -6,7 +6,14 @@ multiples uses the EMPTY sentinel, which both kernels treat as no-ops.
 
 ``groupby_pallas`` is the kernel-backed end-to-end concurrent aggregation
 (ticket → segment update → materialize), the hot path used by the engine
-when it runs on TPU.  ``multi_block_ticket`` extends the key space beyond
+when it runs on TPU.  ``make_scan_update_fn`` adapts the segment-update
+kernel to the engine's scan-compiled consume pipeline, so the kernel route
+is just another scan body (engine/groupby.py).  Note the kernels' ticket
+path shares the core contract on overflow: tickets issued past
+``max_groups`` have their ``key_by_ticket`` scatters dropped (mode="drop"),
+so a returned ``count > max_groups`` means the materialization is truncated
+— the engine surfaces this via ``TicketTable.overflowed`` and refuses to
+finalize.  ``multi_block_ticket`` extends the key space beyond
 one VMEM-resident table by radix-splitting the stream over independent
 table blocks — tickets get a per-block base, so the global ticket space has
 bounded gaps (≤ blocks · slack), exactly the fuzzy-ticketer contract.
@@ -43,7 +50,12 @@ def ticket(
     morsel_size: int = 1024,
     interpret: bool | None = None,
 ):
-    """Kernel-backed GET_OR_INSERT over a key column (any length)."""
+    """Kernel-backed GET_OR_INSERT over a key column (any length).
+
+    Contract: the returned ``count`` must be checked against ``max_groups``
+    by the caller — tickets past the bound had their ``key_by_ticket``
+    scatters dropped (truncated materialization).  ``groupby_pallas`` does
+    this check for you (``raise_on_overflow``)."""
     if interpret is None:
         interpret = _auto_interpret()
     n = keys.shape[0]
@@ -76,6 +88,42 @@ def segment_aggregate(
     )
 
 
+@functools.lru_cache(maxsize=None)
+def make_scan_update_fn(
+    *,
+    strategy: str = "scatter",
+    morsel_size: int = 1024,
+    interpret: bool | None = None,
+):
+    """Adapt the Pallas segment-update kernel to the engine's update-fn
+    signature ``(acc, tickets, values, kind=...) -> acc``.
+
+    The engine's scan-compiled consume pipeline threads its accumulators
+    through ``lax.scan``; with this adapter the kernel folds each ticketed
+    morsel into a fresh partial vector in VMEM which is then merged into the
+    carried accumulator — making the kernel route just another scan body
+    instead of a separate host-driven code path.  Memoized so every operator
+    with the same (strategy, morsel_size, interpret) shares one function
+    object — the engine jit-specializes its scan on update-fn identity, and
+    a fresh closure per operator would recompile the whole consume scan.
+    """
+
+    def update_fn(acc, tickets, values, kind: str = "sum"):
+        part = segment_aggregate(
+            tickets, values, num_groups=acc.shape[0], kind=kind,
+            strategy=strategy, morsel_size=min(morsel_size, tickets.shape[0]),
+            interpret=interpret,
+        )
+        if kind in ("sum", "count"):
+            return acc + part.astype(acc.dtype)
+        # min/max: the kernel leaves ±inf identities for untouched groups,
+        # which lose against any carried value under minimum/maximum.
+        part = part.astype(acc.dtype)
+        return jnp.minimum(acc, part) if kind == "min" else jnp.maximum(acc, part)
+
+    return update_fn
+
+
 def groupby_pallas(
     keys: jnp.ndarray,
     values: jnp.ndarray | None = None,
@@ -86,8 +134,17 @@ def groupby_pallas(
     morsel_size: int = 1024,
     update_strategy: str = "scatter",
     interpret: bool | None = None,
+    raise_on_overflow: bool = True,
 ):
-    """Kernel-backed fully concurrent GROUP BY (paper Fig. 2 end-to-end)."""
+    """Kernel-backed fully concurrent GROUP BY (paper Fig. 2 end-to-end).
+
+    With ``raise_on_overflow`` (default) the returned ticket count is checked
+    against ``max_groups`` on the host and a RuntimeError is raised when the
+    stream held more distinct keys — the kernel's ``key_by_ticket``/acc
+    scatters past the bound are dropped, so the materialization would
+    otherwise be silently truncated.  Pass False to skip the one blocking
+    device sync this costs (e.g. in throughput benchmarks).
+    """
     if capacity is None:
         capacity = 16
         while capacity < 2 * max_groups:
@@ -104,6 +161,19 @@ def groupby_pallas(
     )
     if kind in ("min", "max"):
         acc = jnp.where(jnp.isinf(acc), jnp.nan, acc)
+    if raise_on_overflow:
+        issued = int(jax.device_get(count))
+        dropped = bool(jax.device_get(jnp.any(
+            (tickets < 0) & (keys.astype(jnp.uint32) != EMPTY_KEY)
+        )))
+        if issued > max_groups or dropped:
+            raise RuntimeError(
+                f"GROUP BY overflow: {issued} tickets issued against "
+                f"max_groups={max_groups}"
+                + (" and the probe table saturated (rows dropped)" if dropped else "")
+                + "; results would be truncated. Re-run with a larger "
+                "max_groups/capacity."
+            )
     return key_by_ticket, acc, count
 
 

@@ -93,12 +93,16 @@ def _ticket_kernel(
     kbt = kbt_ref[...]
     base = count_ref[0]
     g = kbt.shape[0]
+    # Bounded probe loop (same contract as core.ticketing.get_or_insert):
+    # a completely full table must terminate, not spin; unresolved lanes
+    # surface as ticket -1 and the caller checks count against max_groups.
+    max_rounds = 2 * capacity + 2
 
     def cond(st):
-        return jnp.any(st[4])
+        return jnp.any(st[4]) & (st[7] < max_rounds)
 
     def body(st):
-        tkeys, ttks, kbt, slot, active, out, count = st
+        tkeys, ttks, kbt, slot, active, out, count, rounds = st
         probed_key = jnp.take(tkeys, slot)
         probed_tk = jnp.take(ttks, slot)
 
@@ -132,16 +136,20 @@ def _ticket_kernel(
         out = jnp.where(won, new_ticket, out)
         active = active & ~won
         count = count + jnp.sum(won.astype(jnp.int32))
-        return tkeys, ttks, kbt, slot, active, out, count
+        return tkeys, ttks, kbt, slot, active, out, count, rounds + 1
 
-    init = (tkeys, ttks, kbt, slot0, valid, jnp.zeros((m,), jnp.int32), base)
-    tkeys, ttks, kbt, _, _, out, count = jax.lax.while_loop(cond, body, init)
+    init = (
+        tkeys, ttks, kbt, slot0, valid, jnp.zeros((m,), jnp.int32), base,
+        jnp.zeros((), jnp.int32),
+    )
+    tkeys, ttks, kbt, _, _, out, count, _ = jax.lax.while_loop(cond, body, init)
 
     tkeys_ref[...] = tkeys
     ttks_ref[...] = ttks
     kbt_ref[...] = kbt
     count_ref[0] = count
-    tickets_ref[0, :] = jnp.where(valid, out - 1, -1)  # expose 0-based
+    # unresolved lanes (saturated table) still have out == 0 → ticket -1
+    tickets_ref[0, :] = jnp.where(valid & (out > 0), out - 1, -1)
 
 
 @functools.partial(

@@ -40,6 +40,7 @@ from repro.models.layers import (
     softcap,
     ticketed_embed,
 )
+from repro.parallel.sharding import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -168,7 +169,7 @@ def _moe_ep_shardmapped(p_moe: Params, cfg: ModelConfig, h, ep_info: dict):
         aux = jax.lax.pmean(aux, dp + ("model",))
         return out.reshape(b, s, d), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(moe_specs, P(dp, None, None)),

@@ -35,6 +35,7 @@ from repro.optim.clip import clip_by_global_norm
 from repro.optim.compression import compressed_psum
 from repro.optim.schedules import warmup_cosine
 from repro.parallel.sharding import batch_spec, dp_axes, param_shardings, param_specs
+from repro.parallel.sharding import shard_map
 
 
 @dataclass(frozen=True)
@@ -154,7 +155,7 @@ def make_manual_dp_step(mesh, cfg: ModelConfig, hp: TrainHParams):
         return {k: P(dp, *([None] * (v.ndim - 1))) for k, v in batch.items()}
 
     def wrapped(params, opt_state, batch):
-        fn = jax.shard_map(
+        fn = shard_map(
             local_step,
             mesh=mesh,
             in_specs=(

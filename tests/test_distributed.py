@@ -125,7 +125,8 @@ def run_ep(x, pg, pu, pd, prouter):
     out, aux = moe_lib.moe_mlp_ep(p_loc, cfg, x, axis="model", num_shards=4,
                                   capacity_per_expert=cap)
     return out, aux
-fn = jax.shard_map(run_ep, mesh=mesh,
+from repro.parallel.sharding import shard_map
+fn = shard_map(run_ep, mesh=mesh,
         in_specs=(P(), P("model"), P("model"), P("model"), P()),
         out_specs=(P(), P()), check_vma=False)
 ep_out, ep_aux = fn(x, p["w_gate"], p["w_up"], p["w_down"], p["router"])

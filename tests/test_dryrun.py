@@ -22,6 +22,7 @@ out = {
   "flops": res["cost_raw_scanned"]["flops"],
   "coll": sum(v for k, v in res["collectives_raw_scanned"].items() if k != "counts"),
   "peak": res["memory"]["peak_bytes"],
+  "peak_exact": res["memory"]["peak_exact"],
   "bottleneck": res["roofline"]["bottleneck"],
 }
 print(json.dumps(out))
@@ -32,7 +33,10 @@ print(json.dumps(out))
     res = json.loads(out.stdout.strip().splitlines()[-1])
     assert res["flops"] > 1e11          # nontrivial per-device compute
     assert res["coll"] > 1e8            # TP collectives present
-    assert 0 < res["peak"] < 16 * 2**30  # fits v5e HBM
+    # fits v5e HBM; on 0.4.x jaxlib peak is a component-sum upper bound
+    # (the temp arena is not liveness-aware), so only bound it loosely there
+    hbm_bound = 16 * 2**30 if res["peak_exact"] else 32 * 2**30
+    assert 0 < res["peak"] < hbm_bound
     assert res["bottleneck"] in ("compute", "memory", "collective")
 
 
