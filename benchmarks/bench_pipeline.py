@@ -21,12 +21,13 @@ import numpy as np
 import jax.numpy as jnp
 
 from benchmarks.common import N_ROWS, emit, gen_keys
-from repro.engine import AggSpec, GroupByOperator, Table
+from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, Table
 
 
 def _time_consume(pipeline: str, table: Table, max_groups: int,
                   morsel_rows: int, runs: int) -> float:
-    """Median µs for a fresh operator consuming the whole table once.
+    """Median µs for a fresh plan executing over the whole table once
+    (through the GroupByPlan front door → scan-pipeline executor).
 
     Warm-up strategy differs per pipeline so compile time is excluded from
     both without paying for extra full host-loop passes (which are exactly
@@ -34,14 +35,14 @@ def _time_consume(pipeline: str, table: Table, max_groups: int,
     pass (its program is specialized on the chunk's morsel count), while the
     host loop compiles per-morsel programs that a 2-morsel prefix warms.
     """
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("sum", "v"), AggSpec("count")),
+        strategy="concurrent", max_groups=max_groups,
+        execution=ExecutionPolicy(pipeline=pipeline, morsel_rows=morsel_rows),
+    )
 
     def once(t):
-        op = GroupByOperator(
-            key_columns=["k"], aggs=[AggSpec("sum", "v"), AggSpec("count")],
-            max_groups=max_groups, morsel_rows=morsel_rows, pipeline=pipeline,
-        )
-        op.consume(t)
-        return op.finalize()
+        return plan.run(t)
 
     if pipeline == "host":
         prefix = Table({k: v[: 2 * morsel_rows] for k, v in table.columns.items()})
@@ -78,11 +79,11 @@ def run(n: int | None = None, morsel_rows: int = 4096):
         )
 
     # overflow contract: forced overflow raises, never truncates
-    op = GroupByOperator(key_columns=["k"], aggs=[AggSpec("count")],
-                         max_groups=64, morsel_rows=morsel_rows)
-    op.consume(Table({"k": jnp.asarray(np.arange(4 * morsel_rows, dtype=np.uint32))}))
+    plan = GroupByPlan(keys=("k",), aggs=(AggSpec("count"),),
+                       strategy="concurrent", max_groups=64,
+                       execution=ExecutionPolicy(morsel_rows=morsel_rows))
     try:
-        op.finalize()
+        plan.run(Table({"k": jnp.asarray(np.arange(4 * morsel_rows, dtype=np.uint32))}))
         raise AssertionError("forced overflow did not raise — silent truncation")
     except RuntimeError:
         emit("pipeline_overflow_raises", 0.0, "ok")

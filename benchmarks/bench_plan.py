@@ -1,0 +1,40 @@
+"""Strategy sweep through the GroupByPlan front door.
+
+The point of the plan API: the same declarative query runs under every
+execution strategy by changing ONE field.  Sweeps concurrent / partitioned
+/ hybrid / pallas(interpret off-TPU) over the paper's low/high-cardinality
+uniform workloads plus a heavy-hitter stream, and emits µs per strategy —
+the mesh-level strategies are covered by bench_e2e's scaling section.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import N_ROWS, emit, gen_keys, time_fn
+from repro.engine import AggSpec, GroupByPlan, SaturationPolicy, Table
+
+STRATEGIES = ("concurrent", "partitioned", "hybrid", "pallas")
+
+
+def run(n: int | None = None):
+    n = n or N_ROWS
+    rng = np.random.default_rng(3)
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    for card in ("low", "high"):
+        for dist in ("uniform", "heavy"):
+            keys = jnp.asarray(gen_keys(n, card, dist))
+            uniq = {"low": 1000, "high": n // 10}[card]
+            table = Table({"k": keys, "v": vals})
+            base = GroupByPlan(
+                keys=("k",), aggs=(AggSpec("sum", "v"),), max_groups=uniq,
+                saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
+            )
+            for strategy in STRATEGIES:
+                plan = base.with_(strategy=strategy)  # the one-field sweep
+                us = time_fn(lambda: plan.run(table).columns)
+                emit(f"plan_{strategy}_{card}_{dist}", us, f"n={n}")
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,7 @@ def main() -> None:
         bench_e2e,
         bench_hybrid,
         bench_memory,
+        bench_plan,
         bench_resize,
         bench_roofline,
         bench_ticketer,
@@ -38,6 +39,7 @@ def main() -> None:
         ("fig8", lambda: bench_resize.run(n=n)),
         ("table3", lambda: bench_memory.run(n=n)),
         ("hybrid", lambda: bench_hybrid.run(n=n)),
+        ("plan_sweep", lambda: bench_plan.run(n=n)),
         ("roofline", bench_roofline.run),
     ]
     for name, fn in suites:

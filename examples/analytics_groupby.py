@@ -25,6 +25,9 @@ def main():
         aggs=[AggSpec("count"), AggSpec("sum", "qty"),
               AggSpec("mean", "price"), AggSpec("max", "price")],
         max_groups=50 * 100,
+        update=None,            # planner picks the update strategy
+        strategy="auto",        # …and the execution strategy (GroupByPlan)
+        saturation="grow",      # a misestimated bound recovers, never truncates
     )
     out = agg.run(Scan(sales, chunk_rows=1 << 16), Filter(lambda c: c["qty"] > 4))
     ng = int(out["__num_groups__"][0])

@@ -1,4 +1,9 @@
-"""Quickstart: fully concurrent GROUP BY aggregation (the paper's Fig. 2).
+"""Quickstart: the GroupByPlan front door (one API, every strategy).
+
+A GROUP BY is declared once — key columns, aggregates, saturation policy —
+and the strategy is a single field: ``auto`` lets the planner choose from
+sample statistics (the paper's estimate → choose → run), or pin any of
+``concurrent | partitioned | hybrid | pallas`` to sweep the design space.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -8,7 +13,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import concurrent_groupby, partitioned_groupby, choose_plan, sample_stats
+from repro.core import choose_plan, sample_stats
+from repro.engine import AggSpec, GroupByPlan, SaturationPolicy, Table
 
 
 def main():
@@ -21,25 +27,31 @@ def main():
         else:
             keys = rng.integers(0, uniq, size=n).astype(np.uint32)
         vals = rng.normal(size=n).astype(np.float32)
-        kj, vj = jnp.asarray(keys), jnp.asarray(vals)
+        table = Table({"k": jnp.asarray(keys), "v": jnp.asarray(vals)})
 
-        # the paper's recommended adaptive strategy choice (TPU-oriented:
-        # 'onehot' assumes an MXU; this CPU demo times the scatter default)
-        plan = choose_plan(sample_stats(kj))
-        print(f"[{card}] adaptive plan (TPU): ticketing={plan.ticketing} "
-              f"update={plan.update} merge={plan.distributed}")
+        # what the optimizer would pick (TPU-oriented: 'onehot' assumes MXU)
+        stats = sample_stats(table["k"])
+        choice = choose_plan(stats)
+        print(f"[{card}] adaptive plan (TPU): ticketing={choice.ticketing} "
+              f"update={choice.update} merge={choice.distributed}")
 
-        def timed(fn):
-            jax.block_until_ready(fn())
+        base = GroupByPlan(
+            keys=("k",), aggs=(AggSpec("sum", "v"),),
+            max_groups=uniq, saturation=SaturationPolicy.UNCHECKED,
+            raw_keys=True,
+        )
+
+        def timed(plan):
+            jax.block_until_ready(plan.run(table).columns)
             t0 = time.perf_counter()
-            out = jax.block_until_ready(fn())
+            out = jax.block_until_ready(plan.run(table).columns)
             return out, (time.perf_counter() - t0) * 1e3
 
-        conc, ms_c = timed(lambda: concurrent_groupby(
-            kj, vj, kind="sum", update="scatter", max_groups=uniq))
-        part, ms_p = timed(lambda: partitioned_groupby(
-            kj, vj, kind="sum", max_groups=uniq, num_workers=8))
-        print(f"         concurrent: {ms_c:8.1f} ms   ({int(conc.num_groups)} groups)")
+        # the strategy sweep is a one-field change
+        conc, ms_c = timed(base.with_(strategy="concurrent"))
+        part, ms_p = timed(base.with_(strategy="partitioned"))
+        ng = int(conc["__num_groups__"][0])
+        print(f"         concurrent: {ms_c:8.1f} ms   ({ng} groups)")
         print(f"         partitioned:{ms_p:8.1f} ms   speedup {ms_p/ms_c:.2f}x\n")
 
 

@@ -1,15 +1,22 @@
 """Core library: the paper's fully concurrent GROUP BY aggregation, TPU-native.
 
-Public API:
-  concurrent_groupby      — end-to-end ticket→update→materialize (single core)
-  partitioned_groupby     — Leis-style baseline (single core, vmapped workers)
-  concurrent_groupby_sharded / partitioned_groupby_sharded — mesh versions
+The declarative front door for *running* a GROUP BY is
+``repro.engine.plan_api.GroupByPlan`` — the functions here are the stage
+machinery (ticketing, update strategies, resize, capacity rule) plus
+signature-compatible legacy adapters that lower to that plan API:
+
+  concurrent_groupby      — adapter: GroupByPlan(strategy="concurrent")
+  partitioned_groupby     — adapter: GroupByPlan(strategy="partitioned")
+  hybrid_groupby          — adapter: GroupByPlan(strategy="hybrid")
+  concurrent_groupby_sharded / partitioned_groupby_sharded — adapters:
+                            GroupByPlan(strategy="sharded")
   TicketTable / get_or_insert / lookup — the Folklore*-analogue hash table
   choose_plan             — paper-guided adaptive strategy selection
+  table_capacity          — THE probe-table capacity rule (hashing.py)
 """
 from repro.core.aggregation import GroupByResult, concurrent_groupby, groupby_oracle
 from repro.core.adaptive import Plan, WorkloadStats, choose_plan, sample_stats
-from repro.core.hashing import EMPTY_KEY
+from repro.core.hashing import EMPTY_KEY, table_capacity
 from repro.core.hybrid import detect_heavy_hitters, hybrid_groupby
 from repro.core.partitioned import partitioned_groupby
 from repro.core.resize import maybe_resize, migrate
@@ -44,6 +51,7 @@ __all__ = [
     "choose_plan",
     "sample_stats",
     "EMPTY_KEY",
+    "table_capacity",
     "detect_heavy_hitters",
     "hybrid_groupby",
     "partitioned_groupby",

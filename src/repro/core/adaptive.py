@@ -24,7 +24,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import EMPTY_KEY
+from repro.core.hashing import EMPTY_KEY, table_capacity
 
 
 @dataclass(frozen=True)
@@ -43,20 +43,14 @@ class Plan:
     capacity: int    # ticket table capacity (pow2)
 
 
-def _pow2_at_least(x: int) -> int:
-    p = 16
-    while p < x:
-        p *= 2
-    return p
-
-
 def choose_plan(stats: WorkloadStats) -> Plan:
     unique_frac = stats.est_groups / max(stats.n_rows, 1)
     heavy = stats.est_top_freq >= 0.25
-    cap = _pow2_at_least(2 * stats.est_groups)
+    cap = table_capacity(stats.est_groups)
 
     if stats.key_domain is not None and stats.key_domain <= 2 * stats.est_groups:
-        return Plan("direct", "scatter", "dense_psum", _pow2_at_least(stats.key_domain))
+        # direct ticketing: ticket == key, so capacity only needs the domain
+        return Plan("direct", "scatter", "dense_psum", table_capacity(stats.key_domain, load_factor=1.0))
     if stats.est_groups <= 4096:
         # Low cardinality: MXU one-hot update is contention-free and the
         # matmul is small; dense psum merge is tiny.

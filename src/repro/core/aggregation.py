@@ -1,13 +1,18 @@
 """End-to-end fully concurrent group aggregation (paper §2.3, Fig. 2).
 
-Combines the two stages — ticketing (§3.1) and partial-aggregate update
-(§3.2) — plus materialization, in the morsel-at-a-time style of the paper's
-execution model: ticket an entire morsel, then aggregate that morsel.
+The public entry point :func:`concurrent_groupby` is now a thin adapter
+over the declarative plan API (``repro.engine.plan_api.GroupByPlan`` with
+``strategy="concurrent"``): the ticket→update→materialize pipeline it used
+to assemble by hand lives behind the single executor seam
+(``repro.engine.executors``), built on the scan-compiled morsel pipeline.
+The signature and result type are unchanged; what is new is that the
+checked/recovering saturation policies are available here too — pass
+``saturation="raise"`` or ``"grow"`` instead of the legacy default
+``"unchecked"`` (the paper's perfect-estimate regime, which silently
+truncates past ``max_groups``).
 
-The public entry point is :func:`concurrent_groupby`.  It is jit-friendly
-(static shapes; the number of morsels is a static unroll via
-``jax.lax.scan``), and every stage strategy is pluggable so the benchmark
-harness can sweep the design space exactly as the paper does.
+:func:`groupby_oracle` stays independent of all the machinery (sort +
+segment-reduce) — it is the reference every strategy is tested against.
 """
 from __future__ import annotations
 
@@ -19,7 +24,6 @@ import jax.numpy as jnp
 
 from repro.core import ticketing as tk
 from repro.core import updates as up
-from repro.core.hashing import EMPTY_KEY
 
 
 class GroupByResult(NamedTuple):
@@ -28,24 +32,6 @@ class GroupByResult(NamedTuple):
     num_groups: jnp.ndarray  # () int32
 
 
-def _round_up_pow2(x: int) -> int:
-    p = 1
-    while p < x:
-        p *= 2
-    return p
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "kind",
-        "update",
-        "max_groups",
-        "morsel_size",
-        "ticketing",
-        "capacity",
-    ),
-)
 def concurrent_groupby(
     keys: jnp.ndarray,
     values: jnp.ndarray | None = None,
@@ -56,69 +42,64 @@ def concurrent_groupby(
     morsel_size: int | None = None,
     ticketing: str = "hash",
     capacity: int | None = None,
+    saturation: str = "unchecked",
 ) -> GroupByResult:
     """GROUP BY keys AGGREGATE(kind) OVER values, fully concurrently.
 
     Args:
       keys: (N,) uint32/int key column. EMPTY_KEY rows are ignored (morsel
         padding).
-      values: (N,) value column; ignored for kind="count".
+      values: (N,) value column; ignored for kind="count".  A (N, V) column
+        block aggregates each trailing dim independently.
       kind: sum | count | min | max.
       update: scatter | onehot | sort_segment | serialized (§3.2 strategies).
       max_groups: static bound on the number of unique keys (the paper's
-        "perfect cardinality estimate" assumption; resize.py handles the
-        misestimated case).
+        "perfect cardinality estimate" assumption).
       morsel_size: rows per morsel. None → single morsel (whole column).
       ticketing: hash (Folklore* analogue) | sort | direct.
-      capacity: hash-table slots; default 2× max_groups rounded to pow2.
+      capacity: hash-table slots; default per core.hashing.table_capacity.
+      saturation: unchecked (legacy default: truncate past the bound) |
+        raise | grow — see plan_api.SaturationPolicy.
 
     Returns GroupByResult with keys in ticket order and the aggregate vector.
+
+    Note: this adapter executes eagerly (the executor drives host-side
+    control flow for resize/saturation), so it can no longer be nested
+    under an outer ``jax.jit``/``vmap`` — compose the stage primitives
+    (``tk.get_or_insert`` + ``up.*``) directly for fully-traced uses, as
+    ``models/layers.ticketed_embed`` does.
     """
-    keys = keys.reshape(-1).astype(jnp.uint32)
-    n = keys.shape[0]
-    if values is None:
-        values = jnp.ones((n,), jnp.float32)
-    values = values.reshape(n, -1) if values.ndim > 1 else values.reshape(-1)
-    acc_width = None if values.ndim == 1 else values.shape[1]
+    from repro.engine.plan_api import (
+        AggSpec,
+        ExecutionPolicy,
+        GroupByPlan,
+        arrays_as_table,
+        execute,
+    )
 
-    if capacity is None:
-        capacity = _round_up_pow2(max(2 * max_groups, 16))
-    update_fn = up.get_update_fn(update)
-    acc = up.init_acc(max_groups, kind, width=acc_width)
-
-    if ticketing == "sort":
-        tickets, key_by_ticket, count = tk.sort_ticketing(keys)
-        key_by_ticket = key_by_ticket[:max_groups]
-        acc = update_fn(acc, tickets, values, kind=kind)
-        return GroupByResult(key_by_ticket, up.finalize(kind, acc), count)
-
-    if ticketing == "direct":
-        tickets, key_by_ticket, count = tk.direct_ticketing(keys, max_groups)
-        acc = update_fn(acc, tickets, values, kind=kind)
-        nnz = jnp.sum((up.init_acc(max_groups, "count").at[tickets].add(1.0) > 0))
-        return GroupByResult(key_by_ticket, up.finalize(kind, acc), count)
-
-    assert ticketing == "hash", ticketing
-    table = tk.make_table(capacity, max_groups=max_groups)
-
-    if morsel_size is None or morsel_size >= n:
-        tickets, table = tk.get_or_insert(table, keys)
-        acc = update_fn(acc, tickets, values, kind=kind)
+    was_2d = values is not None and values.ndim > 1
+    table, vcols = arrays_as_table(keys, values)
+    n = table.num_rows
+    if kind == "count":
+        aggs = [AggSpec("count")]
     else:
-        assert n % morsel_size == 0, "pad the column to a morsel multiple"
-        km = keys.reshape(-1, morsel_size)
-        vm = values.reshape(-1, morsel_size, *values.shape[1:])
-
-        def step(carry, morsel):
-            table, acc = carry
-            mk, mv = morsel
-            tickets, table = tk.get_or_insert(table, mk)
-            acc = update_fn(acc, tickets, mv, kind=kind)
-            return (table, acc), None
-
-        (table, acc), _ = jax.lax.scan(step, (table, acc), (km, vm))
-
-    return GroupByResult(table.key_by_ticket, up.finalize(kind, acc), table.count)
+        aggs = [AggSpec(kind, c) for c in vcols]
+    plan = GroupByPlan(
+        keys=("__key__",), aggs=tuple(aggs), strategy="concurrent",
+        max_groups=max_groups, saturation=saturation, raw_keys=True,
+        execution=ExecutionPolicy(
+            update=update, morsel_rows=morsel_size or max(n, 1),
+            capacity=capacity, ticketing=ticketing,
+            key_domain=max_groups if ticketing == "direct" else None,
+        ),
+    )
+    out = execute(plan, table)
+    if kind != "count" and was_2d:
+        # preserve the legacy (max_groups, V) block shape, V=1 included
+        acc = jnp.stack([out[a.name] for a in aggs], axis=1)
+    else:
+        acc = out[aggs[0].name]
+    return GroupByResult(out["key"], acc, out["__num_groups__"][0])
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "max_groups"))

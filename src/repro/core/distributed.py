@@ -41,7 +41,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import ticketing as tk
 from repro.core import updates as up
 from repro.core.aggregation import GroupByResult
-from repro.core.hashing import EMPTY_KEY, slot_hash
+from repro.core.hashing import EMPTY_KEY, slot_hash, table_capacity
 from repro.core.partitioned import make_preagg, preagg_morsel
 from repro.parallel.sharding import shard_map
 
@@ -56,8 +56,50 @@ def concurrent_groupby_sharded(
     axis: str = "data",
     max_local_groups: int | None = None,
     update: str = "scatter",
+    saturation: str = "unchecked",
 ):
-    """Fully concurrent aggregation across the mesh ``axis``.
+    """Fully concurrent aggregation across the mesh ``axis`` — adapter over
+    ``GroupByPlan(strategy="sharded", shard_merge="dense_psum")``; the mesh
+    protocol itself is :func:`_concurrent_sharded_impl` behind the executor
+    seam.  Pass ``saturation="raise"|"grow"`` for checked/recovering
+    bounds (the default preserves the legacy unchecked contract)."""
+    from repro.engine.executors import make_executor
+    from repro.engine.plan_api import (
+        AggSpec,
+        ExecutionPolicy,
+        GroupByPlan,
+        arrays_as_table,
+        as_group_result,
+    )
+
+    table, _ = arrays_as_table(keys, values)
+    agg = AggSpec("count") if kind == "count" else AggSpec(kind, "v")
+    plan = GroupByPlan(
+        keys=("__key__",), aggs=(agg,), strategy="sharded",
+        max_groups=max_groups, saturation=saturation, raw_keys=True,
+        execution=ExecutionPolicy(
+            mesh=mesh, axis=axis, shard_merge="dense_psum",
+            max_local_groups=max_local_groups, update=update,
+        ),
+    )
+    ex = make_executor(plan)
+    ex.open()
+    ex.consume(table)
+    return as_group_result(ex.finalize(), agg)
+
+
+def _concurrent_sharded_impl(
+    mesh,
+    keys,
+    values=None,
+    *,
+    kind: str = "count",
+    max_groups: int,
+    axis: str = "data",
+    max_local_groups: int | None = None,
+    update: str = "scatter",
+):
+    """Mesh protocol for the fully concurrent strategy (executor backend).
 
     keys/values are sharded over ``axis`` on dim 0.  Protocol (thread-local
     method of §3.2 at mesh scale):
@@ -71,12 +113,8 @@ def concurrent_groupby_sharded(
     """
     if max_local_groups is None:
         max_local_groups = max_groups
-    cap_local = 16
-    while cap_local < 2 * max_local_groups:
-        cap_local *= 2
-    cap_global = 16
-    while cap_global < 2 * max_groups:
-        cap_global *= 2
+    cap_local = table_capacity(max_local_groups)
+    cap_global = table_capacity(max_groups)
 
     update_fn = up.get_update_fn(update)
 
@@ -112,18 +150,23 @@ def concurrent_groupby_sharded(
             gacc = -jax.lax.pmax(-gacc, axis)
         else:
             gacc = jax.lax.pmax(gacc, axis)
-        return gacc, gtable.key_by_ticket, gtable.count
+        # saturation signal: a local table that overflowed max_local_groups
+        # dropped keys BEFORE the union, so the global count alone cannot
+        # see it — surface the sticky flags for the executor's policy check
+        ovf = (ltable.overflowed | gtable.overflowed).astype(jnp.int32)
+        ovf = jax.lax.psum(ovf, axis)
+        return gacc, gtable.key_by_ticket, gtable.count, ovf
 
     vals = values if values is not None else jnp.ones_like(keys, dtype=jnp.float32)
     fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis), P(axis)),
-        out_specs=(P(), P(), P()),
+        out_specs=(P(), P(), P(), P()),
         check_vma=False,  # while_loop carries start replicated (fresh table)
     )
-    gacc, key_by_ticket, count = fn(keys, vals)
-    return GroupByResult(key_by_ticket, up.finalize(kind, gacc), count)
+    gacc, key_by_ticket, count, ovf = fn(keys, vals)
+    return GroupByResult(key_by_ticket, up.finalize(kind, gacc), count), ovf
 
 
 def partitioned_groupby_sharded(
@@ -137,7 +180,49 @@ def partitioned_groupby_sharded(
     preagg_capacity: int = 4096,
     partition_capacity: int | None = None,
 ):
-    """Leis-style partitioned aggregation across the mesh ``axis`` with a
+    """Leis-style partitioned aggregation across the mesh ``axis`` — adapter
+    over ``GroupByPlan(strategy="sharded", shard_merge="all_to_all")``.
+    Returns the legacy per-device layout ``(keys_p, vals_p, counts_p,
+    overflow_p)`` (the executor's ``.raw``); the plan API's ``finalize``
+    additionally offers the compacted single-table view."""
+    from repro.engine.executors import make_executor
+    from repro.engine.plan_api import (
+        AggSpec,
+        ExecutionPolicy,
+        GroupByPlan,
+        arrays_as_table,
+    )
+
+    table, _ = arrays_as_table(keys, values)
+    agg = AggSpec("count") if kind == "count" else AggSpec(kind, "v")
+    plan = GroupByPlan(
+        keys=("__key__",), aggs=(agg,), strategy="sharded",
+        max_groups=max_groups, saturation="unchecked", raw_keys=True,
+        execution=ExecutionPolicy(
+            mesh=mesh, axis=axis, shard_merge="all_to_all",
+            preagg_capacity=preagg_capacity,
+            partition_capacity=partition_capacity,
+        ),
+    )
+    ex = make_executor(plan)
+    ex.open()
+    ex.consume(table)
+    ex.finalize_raw()  # skips the unified-table compaction nothing here reads
+    return ex.raw
+
+
+def _partitioned_sharded_impl(
+    mesh,
+    keys,
+    values=None,
+    *,
+    kind: str = "count",
+    max_groups: int,
+    axis: str = "data",
+    preagg_capacity: int = 4096,
+    partition_capacity: int | None = None,
+):
+    """Mesh protocol for the partitioned strategy (executor backend) with a
     real all_to_all exchange.
 
     Per device: morsel-vectorized pre-aggregation into a fixed table, spills

@@ -10,6 +10,8 @@ All functions take and return unsigned integer arrays and are stateless.
 """
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
 
 # Sentinel used throughout the ticketing machinery.  Ticket value 0 is
@@ -17,6 +19,25 @@ import jax.numpy as jnp
 # design, and EMPTY_KEY is the corresponding reserved key.
 EMPTY_KEY = jnp.uint32(0xFFFFFFFF)
 EMPTY_TICKET = 0
+
+
+def table_capacity(max_groups: int, load_factor: float = 0.5) -> int:
+    """Smallest power-of-two probe-table capacity that holds ``max_groups``
+    distinct keys at ``load_factor`` occupancy (default 0.5 — past that,
+    linear probing's expected cluster lengths blow up, §3.1).
+
+    This is THE capacity rule for every strategy: the engine operator, the
+    concurrent/hybrid library paths, the sharded local/global tables and the
+    Pallas kernels all size their tables here, so a planner decision about
+    headroom is made in exactly one place.
+    """
+    assert max_groups >= 0, max_groups
+    assert 0.0 < load_factor <= 1.0, load_factor
+    need = max(math.ceil(max_groups / load_factor), 16)
+    cap = 16
+    while cap < need:
+        cap *= 2
+    return cap
 
 
 def murmur3_fmix32(x: jnp.ndarray) -> jnp.ndarray:

@@ -12,24 +12,25 @@ compare+select lanes per row, zero conflicts, the extreme case of the
 thread-local strategy (one "vector" per heavy key).  The remaining tail
 rows flow through the normal concurrent pipeline (ticket + scatter), which
 the heavy-hitter removal has just stripped of its only contention source.
-At the mesh level the registers merge with a psum; the tail merges as
-usual.
 
 This directly addresses the paper's worst corner (Table 2: unique keys +
 heavy hitters, 0.34×–0.48× at 32 threads): the register path absorbs the
 hitters, the tail becomes near-uniform.
+
+The execution lives in ``repro.engine.executors._HybridExecutor`` behind
+the :class:`~repro.engine.plan_api.GroupByPlan` front door
+(``strategy="hybrid"``); :func:`hybrid_groupby` survives as a signature-
+compatible adapter.  The register reduction is chunked over the morsel
+axis there — O(R·morsel_rows) live memory, not the old O(R·N) dense
+compare matrix — and, because the tail rides the scan-compiled pipeline,
+hybrid now participates in saturation recovery (``saturation="grow"``).
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import ticketing as tk
-from repro.core import updates as up
 from repro.core.aggregation import GroupByResult
-from repro.core.hashing import EMPTY_KEY
 
 
 def detect_heavy_hitters(keys: jnp.ndarray, num_registers: int, sample: int = 8192):
@@ -50,9 +51,6 @@ def detect_heavy_hitters(keys: jnp.ndarray, num_registers: int, sample: int = 81
     return out
 
 
-@functools.partial(
-    jax.jit, static_argnames=("kind", "max_groups", "capacity")
-)
 def hybrid_groupby(
     keys: jnp.ndarray,
     values: jnp.ndarray | None,
@@ -61,52 +59,28 @@ def hybrid_groupby(
     kind: str = "count",
     max_groups: int,
     capacity: int | None = None,
+    saturation: str = "unchecked",
 ) -> GroupByResult:
-    keys = keys.reshape(-1).astype(jnp.uint32)
-    n = keys.shape[0]
-    if values is None:
-        values = jnp.ones((n,), jnp.float32)
-    values = values.reshape(-1).astype(jnp.float32)
-    r = heavy_keys.shape[0]
+    """Register + concurrent hybrid GROUP BY (adapter over ``GroupByPlan``
+    with ``strategy="hybrid"`` and the heavy candidates pinned via
+    ``ExecutionPolicy.heavy_keys``)."""
+    from repro.engine.plan_api import (
+        AggSpec,
+        ExecutionPolicy,
+        GroupByPlan,
+        arrays_as_table,
+        as_group_result,
+        execute,
+    )
 
-    # ---- register path: masked dense reductions, zero conflicts ----------
-    is_heavy = keys[None, :] == heavy_keys[:, None]          # (R, N)
-    any_heavy = jnp.any(is_heavy, axis=0)
-    if kind == "count":
-        regs = jnp.sum(is_heavy.astype(jnp.float32), axis=1)
-    elif kind == "sum":
-        regs = jnp.sum(jnp.where(is_heavy, values[None, :], 0.0), axis=1)
-    elif kind == "min":
-        regs = jnp.min(jnp.where(is_heavy, values[None, :], jnp.inf), axis=1)
-    else:
-        regs = jnp.max(jnp.where(is_heavy, values[None, :], -jnp.inf), axis=1)
-
-    # ---- tail path: standard concurrent pipeline on the remaining rows ---
-    tail_keys = jnp.where(any_heavy, EMPTY_KEY, keys)
-    cap = capacity
-    if cap is None:
-        cap = 16
-        while cap < 2 * max_groups:
-            cap *= 2
-    table = tk.make_table(cap, max_groups=max_groups)
-    # pre-insert the heavy keys so they own the FIRST tickets (registers
-    # then merge by position — no search needed)
-    htickets, table = tk.get_or_insert(table, heavy_keys)
-    tickets, table = tk.get_or_insert(table, tail_keys)
-    acc = up.init_acc(max_groups, kind)
-    acc = up.scatter_update(acc, tickets, values, kind=kind)
-
-    # ---- merge registers into their (pre-assigned) ticket slots ----------
-    reg_t = jnp.where(htickets >= 0, htickets, max_groups)
-    if kind in ("sum", "count"):
-        acc = jnp.concatenate([acc, jnp.zeros((1,), jnp.float32)]).at[reg_t].add(regs)[:max_groups]
-    elif kind == "min":
-        acc = jnp.concatenate([acc, jnp.full((1,), jnp.inf)]).at[reg_t].min(regs)[:max_groups]
-    else:
-        acc = jnp.concatenate([acc, jnp.full((1,), -jnp.inf)]).at[reg_t].max(regs)[:max_groups]
-
-    # heavy keys with zero tail occurrences still occupy tickets — count
-    # stays correct because get_or_insert issued them; purely-absent
-    # register slots (padding) are EMPTY_KEY and get dropped by callers via
-    # key_by_ticket.
-    return GroupByResult(table.key_by_ticket, up.finalize(kind, acc), table.count)
+    table, _ = arrays_as_table(keys, values)
+    agg = AggSpec("count") if kind == "count" else AggSpec(kind, "v")
+    plan = GroupByPlan(
+        keys=("__key__",), aggs=(agg,), strategy="hybrid",
+        max_groups=max_groups, saturation=saturation, raw_keys=True,
+        execution=ExecutionPolicy(
+            capacity=capacity,
+            heavy_keys=jnp.asarray(heavy_keys).reshape(-1).astype(jnp.uint32),
+        ),
+    )
+    return as_group_result(execute(plan, table), agg)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.core import ticketing as tk
 from repro.core import updates as up
 from repro.core.aggregation import GroupByResult
-from repro.core.hashing import EMPTY_KEY, slot_hash, xxhash32_mix
+from repro.core.hashing import EMPTY_KEY, slot_hash
 
 
 class PreAggState(NamedTuple):
@@ -90,10 +90,6 @@ def preagg_morsel(state: PreAggState, keys, values, kind: str):
     return state, pending
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("kind", "max_groups", "num_workers", "preagg_capacity", "morsel_size"),
-)
 def partitioned_groupby(
     keys: jnp.ndarray,
     values: jnp.ndarray | None = None,
@@ -103,10 +99,54 @@ def partitioned_groupby(
     num_workers: int = 8,
     preagg_capacity: int = 1024,
     morsel_size: int | None = None,
+    saturation: str = "unchecked",
 ) -> GroupByResult:
     """Single-device simulation of Leis-style partitioned aggregation with
-    ``num_workers`` parallel workers (vmap).  The distributed version with a
-    real all_to_all lives in core/distributed.py."""
+    ``num_workers`` parallel workers (vmap).  Adapter over ``GroupByPlan``
+    with ``strategy="partitioned"`` — the assembled pipeline runs behind
+    the executor seam (``repro.engine.executors._PartitionedExecutor``,
+    which invokes :func:`_partitioned_impl` below); pass
+    ``saturation="raise"|"grow"`` for checked/recovering bounds.  The
+    distributed version with a real all_to_all lives in
+    core/distributed.py."""
+    from repro.engine.plan_api import (
+        AggSpec,
+        ExecutionPolicy,
+        GroupByPlan,
+        arrays_as_table,
+        as_group_result,
+        execute,
+    )
+
+    table, _ = arrays_as_table(keys, values)
+    agg = AggSpec("count") if kind == "count" else AggSpec(kind, "v")
+    plan = GroupByPlan(
+        keys=("__key__",), aggs=(agg,), strategy="partitioned",
+        max_groups=max_groups, saturation=saturation, raw_keys=True,
+        execution=ExecutionPolicy(
+            num_workers=num_workers, preagg_capacity=preagg_capacity,
+            preagg_morsel=morsel_size,
+        ),
+    )
+    return as_group_result(execute(plan, table), agg)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "max_groups", "num_workers", "preagg_capacity", "morsel_size"),
+)
+def _partitioned_impl(
+    keys: jnp.ndarray,
+    values: jnp.ndarray | None = None,
+    *,
+    kind: str = "count",
+    max_groups: int,
+    num_workers: int = 8,
+    preagg_capacity: int = 1024,
+    morsel_size: int | None = None,
+) -> GroupByResult:
+    """The jitted preagg → exchange → partition-wise pipeline (executor
+    backend; reach it through ``GroupByPlan(strategy="partitioned")``)."""
     keys = keys.reshape(-1).astype(jnp.uint32)
     n = keys.shape[0]
     if values is None:

@@ -20,8 +20,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import updates as up
-from repro.core import ticketing as tk
 from repro.models.config import ModelConfig
 
 
@@ -42,11 +40,20 @@ class SyntheticLM:
         self.state = DataState(seed=seed)
         self.track_stats = track_stats
         self.stat_groups = stat_groups
-        cap = 16
-        while cap < 2 * stat_groups:
-            cap *= 2
-        self._stats_table = tk.make_table(cap, max_groups=stat_groups)
-        self._stats_acc = up.init_acc(stat_groups, "count")
+        if track_stats:
+            # Streaming GROUP BY token COUNT through the one executor seam
+            # (GroupByPlan front door).  The tracked key space is bounded to
+            # stat_groups//2 below, so the table can never saturate and the
+            # cheap unchecked policy is exact here.
+            from repro.engine.executors import make_executor
+            from repro.engine.plan_api import AggSpec, GroupByPlan
+
+            self._stats = make_executor(GroupByPlan(
+                keys=("token",), aggs=(AggSpec("count"),),
+                strategy="concurrent", max_groups=stat_groups,
+                saturation="unchecked", raw_keys=True,
+            ))
+            self._stats.open()
 
     def _sample(self, rng: np.random.Generator):
         z = rng.zipf(self.zipf_a, size=(self.batch, self.seq + 1)).astype(np.int64)
@@ -55,12 +62,13 @@ class SyntheticLM:
 
     def token_stats(self):
         """(token_id, count) pairs accumulated so far — the streaming
-        GROUP BY materialization."""
-        n = int(self._stats_table.count)
-        return (
-            np.asarray(self._stats_table.key_by_ticket)[:n],
-            np.asarray(self._stats_acc)[:n],
-        )
+        GROUP BY materialization (finalize is a pure read of the executor's
+        state, so iteration can keep consuming afterwards)."""
+        if not self.track_stats:
+            return np.zeros((0,), np.uint32), np.zeros((0,), np.float32)
+        out = self._stats.finalize()
+        n = int(out["__num_groups__"][0])
+        return np.asarray(out["key"])[:n], np.asarray(out["count(*)"])[:n]
 
     def __iter__(self) -> Iterator[dict]:
         while True:
@@ -82,10 +90,10 @@ class SyntheticLM:
                     rngk, (self.batch, self.seq, self.cfg.d_model)
                 )
             if self.track_stats:
-                # streaming GROUP BY token COUNT via the concurrent engine
+                from repro.engine.columns import Table
+
                 keys = batch["tokens"].reshape(-1).astype(jnp.uint32)
                 # bound the tracked key space: heavy hitters dominate Zipf
                 keys = jnp.where(keys < self.stat_groups // 2, keys, jnp.uint32(0xFFFFFFFF))
-                tickets, self._stats_table = tk.get_or_insert(self._stats_table, keys)
-                self._stats_acc = up.scatter_update(self._stats_acc, tickets, jnp.ones_like(keys, jnp.float32), kind="count")
+                self._stats.consume(Table({"token": keys}))
             yield batch

@@ -1,6 +1,19 @@
 from repro.engine.columns import Table, combine_keys
-from repro.engine.groupby import AggSpec, GroupByOperator, GroupByOverflowError, groupby
+from repro.engine.executors import make_executor, resolve_plan
+from repro.engine.groupby import (
+    AggSpec,
+    GroupByOperator,
+    GroupByOverflowError,
+    expand_agg_specs,
+    groupby,
+)
 from repro.engine.morsels import DEFAULT_MORSEL_ROWS, morselize_chunk
+from repro.engine.plan_api import (
+    ExecutionPolicy,
+    GroupByPlan,
+    SaturationPolicy,
+    execute,
+)
 from repro.engine.plans import Aggregate, Filter, Scan
 
 __all__ = [
@@ -9,10 +22,17 @@ __all__ = [
     "AggSpec",
     "GroupByOperator",
     "GroupByOverflowError",
+    "expand_agg_specs",
     "groupby",
     "DEFAULT_MORSEL_ROWS",
     "morselize_chunk",
     "Aggregate",
     "Filter",
     "Scan",
+    "ExecutionPolicy",
+    "GroupByPlan",
+    "SaturationPolicy",
+    "execute",
+    "make_executor",
+    "resolve_plan",
 ]

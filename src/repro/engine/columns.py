@@ -36,6 +36,26 @@ class Table:
         return Table({n: self.columns[n] for n in names})
 
 
+def chunk_key_column(chunk: "Table", key_columns, raw_keys: bool = False):
+    """Canonicalize one pipeline chunk: the uint32 grouping-key column
+    (hash-combined unless ``raw_keys``, with the ``__mask__`` selection
+    vector applied as the EMPTY sentinel) plus the remaining columns.
+
+    The single definition shared by the engine operator and every executor
+    strategy — mask/key-combining semantics must not diverge between them.
+    """
+    cols = dict(chunk.columns)
+    mask = cols.pop("__mask__", None)
+    if raw_keys:
+        assert len(key_columns) == 1, "raw_keys needs exactly one key column"
+        keys = cols[key_columns[0]].reshape(-1).astype(jnp.uint32)
+    else:
+        keys = combine_keys(*(cols[c] for c in key_columns))
+    if mask is not None:
+        keys = jnp.where(mask, keys, EMPTY_KEY)
+    return keys, cols
+
+
 def combine_keys(*cols: jnp.ndarray) -> jnp.ndarray:
     """Hash-combine multiple key columns into one uint32 key column.
 

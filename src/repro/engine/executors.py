@@ -1,0 +1,725 @@
+"""Executors: the single seam every GROUP BY strategy lowers through.
+
+``make_executor(plan)`` turns a declarative :class:`GroupByPlan` into an
+object implementing the morsel-driven operator protocol
+
+    open() → consume(chunk: Table)* → finalize() → Table
+
+which is exactly the contract of the PR-1 scan-compiled pipeline breaker
+(engine/groupby.py).  The strategies:
+
+  * ``concurrent`` — the scan-compiled morsel pipeline (hash ticketing);
+    ``execution.ticketing="sort"|"direct"`` selects the sort-based /
+    perfect-hash one-shot variants.  ``execution.use_kernel`` swaps the
+    update stage for the Pallas segment-update kernel inside the same scan.
+  * ``hybrid``     — heavy-hitter register path + concurrent tail (§6
+    future work).  The register reduction is chunked over the morsel axis,
+    so its memory is O(R·morsel_rows), never O(R·N).
+  * ``pallas``     — the kernel-backed ticket→update pipeline (VMEM table).
+  * ``partitioned``— the Leis-style preagg/exchange/final baseline.
+  * ``sharded``    — mesh execution; ``execution.shard_merge`` picks the
+    dense-psum (thread-local analogue) or all_to_all (partitioned) merge.
+
+Saturation is enforced here, uniformly: every executor implements
+``raise`` / ``grow`` / ``unchecked`` (plan_api.SaturationPolicy).  ``grow``
+is the engine's migrate-and-replay recovery generalized — executors retain
+the consumed chunks, and an overflowing finalize re-runs with a grown
+bound (bounded by the consumed row count, so it terminates).  This is what
+makes a *misestimated* cardinality a policy decision instead of silent
+truncation on six of the seven legacy entry points.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adaptive
+from repro.core import ticketing as tk
+from repro.core import updates as up
+from repro.core.hashing import EMPTY_KEY, table_capacity
+from repro.engine.columns import Table, chunk_key_column
+from repro.engine.groupby import (
+    GroupByOperator,
+    GroupByOverflowError,
+    build_result_table,
+    expand_agg_specs,
+)
+from repro.engine.morsels import morselize_chunk
+from repro.engine.plan_api import (
+    GroupByPlan,
+    SaturationPolicy,
+    value_columns,
+)
+
+
+def make_executor(plan: GroupByPlan):
+    """Lower a plan to its executor.  ``strategy="auto"`` (or an unset
+    ``max_groups``) defers to a resolving wrapper that samples the first
+    chunk's keys and re-dispatches — the paper's estimate → choose → run."""
+    if plan.saturation is None:
+        # THE saturation default: an estimated bound recovers (a sample
+        # cannot see a long tail); an explicit bound is a caller contract.
+        plan = replace(plan, saturation=(
+            SaturationPolicy.GROW if plan.max_groups is None
+            else SaturationPolicy.RAISE
+        ))
+    if plan.strategy == "auto" or plan.max_groups is None:
+        return _ResolvingExecutor(plan)
+    if plan.strategy == "concurrent":
+        if plan.execution.ticketing in ("sort", "direct"):
+            return _SortDirectExecutor(plan)
+        return _ScanExecutor(plan)
+    if plan.strategy == "hybrid":
+        return _HybridExecutor(plan)
+    if plan.strategy == "pallas":
+        return _PallasExecutor(plan)
+    if plan.strategy == "partitioned":
+        return _PartitionedExecutor(plan)
+    if plan.strategy == "sharded":
+        return _ShardedExecutor(plan)
+    raise ValueError(f"unknown strategy {plan.strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+
+
+def _chunk_keys_values(plan: GroupByPlan, chunk: Table):
+    """Canonicalize one chunk: uint32 key column (combined or raw, with the
+    ``__mask__`` selection vector applied) + float32 value columns."""
+    keys, cols = chunk_key_column(chunk, plan.keys, plan.raw_keys)
+    vals = {c: cols[c].reshape(-1).astype(jnp.float32) for c in value_columns(plan.aggs)}
+    return keys, vals
+
+
+def _concat(parts):
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+
+
+
+def _next_bound(max_groups: int, rows: int, issued: int | None = None) -> int:
+    """THE grow rule.  With the true cardinality known (``issued``) jump
+    straight to it; blind retries grow 4× (geometric → O(log) replays).
+    ``rows`` always suffices, so the recovery loop terminates."""
+    if issued is not None:
+        return min(max(issued, 64), max(rows, issued))
+    return min(max(4 * max_groups, 64), rows)
+
+
+def _overflow_error(count, max_groups) -> GroupByOverflowError:
+    return GroupByOverflowError(
+        f"GROUP BY overflow: {count} distinct keys exceed "
+        f"max_groups={max_groups}; groups past the bound were dropped. "
+        "Use SaturationPolicy.GROW, a larger max_groups, or a better "
+        "cardinality estimate."
+    )
+
+
+def _single_agg(plan: GroupByPlan, strategy: str):
+    if len(plan.aggs) != 1 or plan.aggs[0].kind == "mean":
+        raise ValueError(
+            f"strategy {strategy!r} supports exactly one non-mean aggregate "
+            "per plan; use strategy='concurrent' for multi-aggregate queries"
+        )
+    return plan.aggs[0]
+
+
+# ---------------------------------------------------------------------------
+# auto resolution (estimate → choose → run)
+
+
+def resolve_plan(plan: GroupByPlan, keys: jnp.ndarray) -> GroupByPlan:
+    """Bind ``strategy="auto"`` / ``max_groups=None`` from sample statistics
+    (core/adaptive.py — the paper's Table 1 policy, plus the hybrid route
+    for its worst corner: high cardinality under heavy hitters)."""
+    # a caller-declared bounded key domain (e.g. expert ids) reaches the
+    # planner's direct-ticketing rule through ExecutionPolicy.key_domain
+    stats = adaptive.sample_stats(keys, domain=plan.execution.key_domain)
+    max_groups = plan.max_groups
+    if max_groups is None:
+        # 2× headroom over the estimate, never above the row count, never 0.
+        max_groups = max(1, min(max(stats.est_groups * 2, 64), max(stats.n_rows, 1)))
+    strategy, execution = plan.strategy, plan.execution
+    if strategy == "auto":
+        if stats.est_top_freq >= 0.25 and stats.est_groups > 4096:
+            # Heavy hitters at high cardinality (paper Table 2's 0.34×–0.48×
+            # corner): absorb the hitters in registers, run the tail clean.
+            strategy = "hybrid"
+            update = execution.update or "scatter"
+        else:
+            choice = adaptive.choose_plan(stats)
+            strategy = "concurrent"
+            update = execution.update or (
+                "sort_segment" if choice.ticketing == "sort" else choice.update
+            )
+            if (choice.ticketing == "direct" and execution.ticketing == "hash"
+                    and plan.raw_keys):
+                # bounded key domain: perfect-hash ticketing, ticket == key
+                execution = replace(
+                    execution, ticketing="direct",
+                    key_domain=execution.key_domain or stats.key_domain,
+                )
+        execution = replace(execution, update=update)
+    return replace(plan, strategy=strategy, max_groups=max_groups, execution=execution)
+
+
+class _ResolvingExecutor:
+    """Defers strategy/bound resolution to the first consumed chunk."""
+
+    def __init__(self, plan: GroupByPlan):
+        self._plan = plan
+        self._inner = None
+
+    def open(self) -> None:
+        pass
+
+    def consume(self, chunk: Table) -> None:
+        if self._inner is None:
+            keys, _ = _chunk_keys_values(self._plan, chunk)
+            self._inner = make_executor(resolve_plan(self._plan, keys))
+            self._inner.open()
+        self._inner.consume(chunk)
+
+    def finalize(self) -> Table:
+        if self._inner is None:
+            raise ValueError("GroupByPlan executed over zero chunks")
+        return self._inner.finalize()
+
+
+# ---------------------------------------------------------------------------
+# concurrent: the scan-compiled morsel pipeline
+
+
+class _ScanExecutor:
+    """Strategy ``concurrent`` (hash ticketing): a thin saturation-policy
+    shell around the scan-compiled :class:`GroupByOperator`."""
+
+    def __init__(self, plan: GroupByPlan):
+        self._plan = plan
+        self._max_groups = plan.max_groups
+        self._rows = 0
+        self._chunks = [] if plan.saturation == SaturationPolicy.GROW else None
+        self._op = self._make_op(self._max_groups, first=True)
+
+    def _make_op(self, max_groups: int, first: bool) -> GroupByOperator:
+        p, ex = self._plan, self._plan.execution
+        return GroupByOperator(
+            key_columns=list(p.keys), aggs=list(p.aggs), max_groups=max_groups,
+            morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
+            use_kernel=ex.use_kernel, load_factor=ex.load_factor,
+            pipeline=ex.pipeline,
+            capacity=ex.capacity if first else None,
+            raw_keys=p.raw_keys,
+            check_overflow=p.saturation != SaturationPolicy.UNCHECKED,
+        )
+
+    def open(self) -> None:
+        pass
+
+    def consume(self, chunk: Table) -> None:
+        self._rows += chunk.num_rows
+        if self._chunks is not None:
+            self._chunks.append(chunk)
+        self._op.consume(chunk)
+
+    def finalize(self) -> Table:
+        while True:
+            try:
+                return self._op.finalize()
+            except GroupByOverflowError:
+                if self._chunks is None or self._max_groups >= self._rows:
+                    raise
+                self._max_groups = _next_bound(self._max_groups, self._rows)
+                self._op = self._make_op(self._max_groups, first=False)
+                for c in self._chunks:
+                    self._op.consume(c)
+
+
+class _BufferedExecutor:
+    """Shared chunk-buffering consume for the one-shot strategies
+    (sort/direct ticketing, pallas, partitioned, sharded): sorting, kernel
+    launches and mesh exchanges are pipeline breakers over the full input,
+    so chunks accumulate and the strategy pipeline runs at finalize."""
+
+    def __init__(self, plan: GroupByPlan):
+        self._plan = plan
+        self._keys, self._vals, self._rows = [], [], 0
+
+    def open(self) -> None:
+        pass
+
+    def consume(self, chunk: Table) -> None:
+        keys, vals = _chunk_keys_values(self._plan, chunk)
+        self._rows += int(keys.shape[0])
+        self._keys.append(keys)
+        self._vals.append(vals)
+
+    def _gathered(self):
+        keys = _concat(self._keys)
+        vals = {c: _concat([v[c] for v in self._vals])
+                for c in value_columns(self._plan.aggs)}
+        return keys, vals
+
+    def _gathered_single(self, agg):
+        keys, vals = self._gathered()
+        v = vals[agg.column] if agg.column else jnp.ones(keys.shape, jnp.float32)
+        return keys, v
+
+
+class _SortDirectExecutor(_BufferedExecutor):
+    """Strategy ``concurrent`` with sort-based or perfect-hash (direct)
+    ticketing."""
+
+    def __init__(self, plan: GroupByPlan):
+        if plan.execution.ticketing == "direct" and not plan.raw_keys:
+            # direct ticketing is ticket == key: hash-combined keys leave
+            # the bounded domain, so every row would silently miss
+            raise ValueError(
+                "ticketing='direct' requires raw_keys=True (a single "
+                "bounded-domain uint32 key column)"
+            )
+        super().__init__(plan)
+
+    def finalize(self) -> Table:
+        p, ex = self._plan, self._plan.execution
+        keys, vals = self._gathered()
+        max_groups = p.max_groups
+        if ex.ticketing == "sort":
+            tickets, kbt, count = tk.sort_ticketing(keys)
+            if p.saturation != SaturationPolicy.UNCHECKED:
+                issued = int(jax.device_get(count))
+                if issued > max_groups:
+                    if p.saturation == SaturationPolicy.RAISE:
+                        raise _overflow_error(issued, max_groups)
+                    max_groups = _next_bound(max_groups, self._rows, issued=issued)
+        else:
+            domain = ex.key_domain or max_groups
+            tickets, kbt, count = tk.direct_ticketing(keys, domain)
+            if p.saturation != SaturationPolicy.UNCHECKED:
+                valid = keys != jnp.uint32(EMPTY_KEY)
+                # out-of-domain rows get ticket -1 (dropped); in-domain
+                # occupancy past the bound truncates the accumulators
+                dropped, used = jax.device_get((
+                    jnp.any((tickets < 0) & valid),
+                    jnp.max(jnp.concatenate(
+                        [tickets.reshape(-1), jnp.full((1,), -1, jnp.int32)]
+                    )) + 1,
+                ))
+                if bool(dropped) or int(used) > max_groups:
+                    if p.saturation == SaturationPolicy.RAISE:
+                        raise GroupByOverflowError(
+                            "direct-ticketing overflow: keys outside "
+                            f"domain={domain} or past max_groups={max_groups} "
+                            "would be dropped. Use SaturationPolicy.GROW or "
+                            "declare a larger key_domain/max_groups."
+                        )
+                    # GROW: the domain must cover the largest observed key
+                    # VALUE.  Direct allocates O(domain) arrays, so keep the
+                    # same rows-bound as every other grow — keys far sparser
+                    # than the row count mean direct is the wrong ticketing.
+                    kmax = int(jax.device_get(
+                        jnp.max(jnp.where(valid, keys, jnp.uint32(0)))
+                    ))
+                    bound = max(4 * self._rows, 65536)
+                    if kmax + 1 > bound:
+                        raise GroupByOverflowError(
+                            f"direct-ticketing overflow: observed key {kmax} "
+                            f"needs domain {kmax + 1}, past the rows-bounded "
+                            f"growth limit {bound} — the key space is too "
+                            "sparse for perfect-hash ticketing; use "
+                            "ticketing='hash' instead."
+                        )
+                    domain = max(kmax + 1, domain)
+                    max_groups = max(domain, 64)
+                    tickets, kbt, count = tk.direct_ticketing(keys, domain)
+                # checked reads promise count ≤ materialized rows (legacy
+                # unchecked keeps the raw static-domain count)
+                count = jnp.minimum(count, max_groups)
+        update_fn = up.get_update_fn(ex.update or "scatter")
+        state = up.init_agg_state(expand_agg_specs(p.aggs), max_groups)
+        state = up.update_agg_state(state, tickets, vals, update_fn)
+        return build_result_table(p.aggs, state.get, kbt, count, max_groups)
+
+
+# ---------------------------------------------------------------------------
+# hybrid: heavy-hitter registers + concurrent tail
+
+
+@functools.partial(jax.jit, static_argnames=("kinds",))
+def _hybrid_registers(heavy, km, vm, regs, *, kinds):
+    """Fold one morselized chunk into the per-heavy-key dense registers.
+
+    Scans the morsel axis so the compare matrix is (R, morsel_rows) per
+    step — O(R·morsel) live memory instead of materializing (R, N).
+    Returns the updated registers and the per-row heavy mask (morsel
+    layout), which the caller uses to strip heavy rows from the tail.
+    """
+
+    def body(carry, xs):
+        regs = carry
+        k, vs = xs
+        live = (k != jnp.uint32(EMPTY_KEY))[None, :]
+        is_heavy = (k[None, :] == heavy[:, None]) & live      # (R, morsel)
+        out = []
+        for kind, acc, v in zip(kinds, regs, vs):
+            vb = v[None, :]
+            if kind == "count":
+                out.append(acc + jnp.sum(is_heavy.astype(jnp.float32), axis=1))
+            elif kind == "sum":
+                out.append(acc + jnp.sum(jnp.where(is_heavy, vb, 0.0), axis=1))
+            elif kind == "min":
+                out.append(jnp.minimum(acc, jnp.min(jnp.where(is_heavy, vb, jnp.inf), axis=1)))
+            else:
+                out.append(jnp.maximum(acc, jnp.max(jnp.where(is_heavy, vb, -jnp.inf), axis=1)))
+        return tuple(out), jnp.any(is_heavy, axis=0)
+
+    return jax.lax.scan(body, regs, (km, vm))
+
+
+class _HybridExecutor:
+    """Strategy ``hybrid``: rows matching a small heavy-hitter candidate set
+    accumulate into dense per-key registers (masked reductions — zero
+    conflicts, the extreme thread-local case); the remaining tail flows
+    through the scan-compiled concurrent pipeline, which the heavy-hitter
+    removal has just stripped of its only contention source."""
+
+    def __init__(self, plan: GroupByPlan):
+        self._plan = plan
+        self._specs = expand_agg_specs(plan.aggs)
+        self._kinds = tuple(k for _, k in self._specs)
+        self._vcols = value_columns(plan.aggs)
+        hk = plan.execution.heavy_keys
+        self._heavy = None if hk is None else jnp.asarray(hk).reshape(-1).astype(jnp.uint32)
+        self._regs = None
+        self._op = None
+        self._max_groups = plan.max_groups
+        self._rows = 0
+        self._tail = [] if plan.saturation == SaturationPolicy.GROW else None
+
+    def open(self) -> None:
+        pass
+
+    def _make_op(self, max_groups: int, first: bool) -> GroupByOperator:
+        p, ex = self._plan, self._plan.execution
+        op = GroupByOperator(
+            key_columns=["__key__"], aggs=list(p.aggs), max_groups=max_groups,
+            morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
+            use_kernel=ex.use_kernel, load_factor=ex.load_factor,
+            pipeline=ex.pipeline,
+            capacity=ex.capacity if first else None,
+            raw_keys=True,
+            check_overflow=p.saturation != SaturationPolicy.UNCHECKED,
+        )
+        # Heavy keys own the FIRST tickets: a key whose every occurrence is
+        # absorbed by the register path still gets counted, and the register
+        # merge is a plain ticket-indexed scatter at finalize.
+        _, table = tk.get_or_insert(op._table, self._heavy)
+        op._table = table
+        return op
+
+    def consume(self, chunk: Table) -> None:
+        from repro.core.hybrid import detect_heavy_hitters
+
+        keys, vals = _chunk_keys_values(self._plan, chunk)
+        n = int(keys.shape[0])
+        self._rows += n
+        if self._heavy is None:
+            heavy = detect_heavy_hitters(keys, self._plan.execution.num_registers)
+            self._heavy = jnp.asarray(heavy).reshape(-1).astype(jnp.uint32)
+        if self._heavy.shape[0] == 0:
+            self._heavy = jnp.full((1,), EMPTY_KEY, jnp.uint32)
+        if self._op is None:
+            self._regs = tuple(
+                up.init_acc(self._heavy.shape[0], k) for k in self._kinds
+            )
+            self._op = self._make_op(self._max_groups, first=True)
+        km, vm, _ = morselize_chunk(keys, vals, self._plan.execution.morsel_rows)
+        vtuple = tuple(
+            vm[c] if c is not None else jnp.ones(km.shape, jnp.float32)
+            for c, _ in self._specs
+        )
+        self._regs, hmask = _hybrid_registers(
+            self._heavy, km, vtuple, self._regs, kinds=self._kinds
+        )
+        tail = jnp.where(hmask.reshape(-1)[:n], jnp.uint32(EMPTY_KEY), keys)
+        tail_chunk = Table({"__key__": tail, **{c: vals[c] for c in self._vcols}})
+        if self._tail is not None:
+            self._tail.append(tail_chunk)
+        self._op.consume(tail_chunk)
+
+    def _merged_state(self) -> up.AggState:
+        """Tail accumulators with the registers scattered into their
+        (pre-assigned) ticket slots — a pure function of the live state, so
+        ``finalize`` stays an idempotent read (stream-safe)."""
+        op = self._op
+        heavy_tickets = tk.lookup(op._table, self._heavy)  # -1 for padding
+        accs = []
+        for (_, kind), acc, reg in zip(op._state.specs, op._state.accs, self._regs):
+            merge_kind = "sum" if kind in ("sum", "count") else kind
+            accs.append(up.scatter_update(acc, heavy_tickets, reg, kind=merge_kind))
+        return up.AggState(op._state.specs, tuple(accs))
+
+    def finalize(self) -> Table:
+        if self._op is None:
+            raise ValueError("GroupByPlan executed over zero chunks")
+        while True:
+            op = self._op
+            tail_state = op._state
+            op._state = self._merged_state()
+            try:
+                return op.finalize()
+            except GroupByOverflowError:
+                if self._tail is None or self._max_groups >= self._rows:
+                    raise
+                self._max_groups = _next_bound(self._max_groups, self._rows)
+                self._op = self._make_op(self._max_groups, first=False)
+                for c in self._tail:
+                    self._op.consume(c)
+            finally:
+                # registers stay separate: consume may continue after a read
+                op._state = tail_state
+
+
+# ---------------------------------------------------------------------------
+# pallas: kernel-backed ticket → segment-update pipeline
+
+
+class _PallasExecutor(_BufferedExecutor):
+    """Strategy ``pallas``: the VMEM-resident ticket kernel + segment-update
+    kernel (kernels/ops.py).  The kernel's table state lives only for one
+    launch, so chunks buffer and the pipeline runs at finalize; ``grow``
+    re-launches with a grown bound/capacity (migrate == rebuild here)."""
+
+    def __init__(self, plan: GroupByPlan):
+        super().__init__(plan)
+        self._specs = expand_agg_specs(plan.aggs)
+
+    def finalize(self) -> Table:
+        from repro.kernels import ops as kops
+
+        p, ex = self._plan, self._plan.execution
+        keys, vals = self._gathered()
+        max_groups = p.max_groups
+        capacity = ex.capacity or table_capacity(max_groups, ex.load_factor)
+        while True:
+            tickets, kbt, count = kops.ticket(
+                keys, capacity=capacity, max_groups=max_groups,
+                morsel_size=ex.morsel_size, interpret=ex.interpret,
+            )
+            if p.saturation == SaturationPolicy.UNCHECKED:
+                break
+            issued = int(jax.device_get(count))
+            dropped = bool(jax.device_get(
+                jnp.any((tickets < 0) & (keys != jnp.uint32(EMPTY_KEY)))
+            ))
+            if issued <= max_groups and not dropped:
+                break
+            if p.saturation == SaturationPolicy.RAISE:
+                raise GroupByOverflowError(
+                    f"GROUP BY overflow: {issued} tickets issued against "
+                    f"max_groups={max_groups}"
+                    + (" and the probe table saturated (rows dropped)" if dropped else "")
+                    + "; results would be truncated. Re-run with a larger "
+                    "max_groups/capacity or SaturationPolicy.GROW."
+                )
+            # GROW: the two overflow causes recover independently — an
+            # undersized bound grows max_groups (rows-bounded), a saturated
+            # probe table doubles capacity (the kernel-world migrate)
+            grew = False
+            if issued > max_groups and max_groups < self._rows:
+                max_groups = _next_bound(max_groups, self._rows)
+                grew = True
+            if dropped:
+                capacity = max(table_capacity(max_groups, ex.load_factor), 2 * capacity)
+                grew = True
+            if not grew:
+                raise GroupByOverflowError(
+                    f"GROUP BY overflow: {issued} tickets issued against "
+                    f"max_groups={max_groups} and growth cannot make progress."
+                )
+        accs = {}
+        for col, kind in self._specs:
+            v = vals[col] if col is not None else jnp.ones(keys.shape, jnp.float32)
+            accs[(col, kind)] = kops.segment_aggregate(
+                tickets, v, num_groups=max_groups, kind=kind,
+                strategy=ex.update or "scatter", morsel_size=ex.morsel_size,
+                interpret=ex.interpret,
+            )
+        return build_result_table(
+            p.aggs, lambda c, k: accs[(c, k)], kbt, count, max_groups
+        )
+
+
+# ---------------------------------------------------------------------------
+# partitioned: the Leis-style baseline
+
+
+class _PartitionedExecutor(_BufferedExecutor):
+    """Strategy ``partitioned``: local pre-aggregation, exchange, partition-
+    wise final aggregation (core/partitioned.py).  One aggregate per plan
+    (the pre-agg table carries a single partial)."""
+
+    def __init__(self, plan: GroupByPlan):
+        super().__init__(plan)
+        self._agg = _single_agg(plan, "partitioned")
+
+    def finalize(self) -> Table:
+        from repro.core.partitioned import _partitioned_impl
+
+        p, ex = self._plan, self._plan.execution
+        keys, vals = self._gathered_single(self._agg)
+        rem = (-int(keys.shape[0])) % ex.num_workers
+        if rem:
+            keys = jnp.concatenate([keys, jnp.full((rem,), EMPTY_KEY, jnp.uint32)])
+            vals = jnp.concatenate([vals, jnp.zeros((rem,), jnp.float32)])
+        max_groups = p.max_groups
+        while True:
+            res = _partitioned_impl(
+                keys, vals, kind=self._agg.kind, max_groups=max_groups,
+                num_workers=ex.num_workers, preagg_capacity=ex.preagg_capacity,
+                morsel_size=ex.preagg_morsel,
+            )
+            if p.saturation == SaturationPolicy.UNCHECKED:
+                break
+            issued = int(jax.device_get(res.num_groups))
+            if issued <= max_groups:
+                break
+            if p.saturation == SaturationPolicy.RAISE or max_groups >= self._rows:
+                raise _overflow_error(issued, max_groups)
+            max_groups = _next_bound(max_groups, self._rows, issued=issued)
+        # res.values is already finalized; build_result_table's finalize
+        # pass is idempotent for sum/count/min/max
+        return build_result_table(
+            self._plan.aggs, lambda c, k: res.values, res.keys,
+            res.num_groups, max_groups,
+        )
+
+
+# ---------------------------------------------------------------------------
+# sharded: mesh-level execution
+
+
+class _ShardedExecutor(_BufferedExecutor):
+    """Strategy ``sharded``: the paper's thread comparison at mesh scale.
+    ``shard_merge="dense_psum"`` is the fully-concurrent/thread-local
+    analogue (union-build global table, dense psum merge);
+    ``"all_to_all"`` is the Leis baseline with a real exchange.
+
+    Single-chunk consumes pass the (typically device-sharded) columns
+    through untouched, so the usual `execute(plan, table)` call keeps the
+    caller's sharding; multi-chunk streams concatenate at finalize.  After
+    ``finalize`` the strategy's raw mesh output is kept on ``.raw`` for
+    callers that need the per-device layout (the legacy adapters).
+    """
+
+    def __init__(self, plan: GroupByPlan):
+        super().__init__(plan)
+        self._agg = _single_agg(plan, "sharded")
+        if plan.execution.mesh is None:
+            raise ValueError("strategy 'sharded' requires ExecutionPolicy.mesh")
+        if plan.execution.shard_merge not in ("dense_psum", "all_to_all"):
+            raise ValueError(f"unknown shard_merge {plan.execution.shard_merge!r}")
+        self.raw = None
+
+    def finalize_raw(self):
+        """Run the mesh pipeline under the saturation policy and return the
+        strategy's native output (sets ``.raw``), skipping the unified-table
+        compaction — the legacy per-device adapters need only this.
+
+        Returns ``(max_groups, count)`` alongside setting ``self.raw``.
+        """
+        from repro.core import distributed as dist
+
+        p, ex = self._plan, self._plan.execution
+        keys, vals = self._gathered_single(self._agg)
+        max_groups = p.max_groups
+        max_local_groups = ex.max_local_groups
+        partition_capacity = ex.partition_capacity
+        while True:
+            if ex.shard_merge == "dense_psum":
+                res, table_ovf = dist._concurrent_sharded_impl(
+                    ex.mesh, keys, vals, kind=self._agg.kind,
+                    max_groups=max_groups, axis=ex.axis,
+                    max_local_groups=max_local_groups,
+                    update=ex.update or "scatter",
+                )
+                self.raw = res
+                count = res.num_groups
+                overflow_rows = None
+                if p.saturation != SaturationPolicy.UNCHECKED and int(
+                    jax.device_get(table_ovf)
+                ) > 0:
+                    # a LOCAL table overflow drops keys before the union, so
+                    # the global count can't see it — grow both bounds
+                    if (p.saturation != SaturationPolicy.GROW
+                            or max_groups >= self._rows):
+                        raise GroupByOverflowError(
+                            "sharded GROUP BY overflow: a per-device table "
+                            f"exceeded max_local_groups={max_local_groups or max_groups} "
+                            f"(or the union exceeded max_groups={max_groups}); "
+                            "dropped keys never reach the merge. Use "
+                            "SaturationPolicy.GROW or larger bounds."
+                        )
+                    max_groups = _next_bound(max_groups, self._rows)
+                    max_local_groups = max_groups
+                    continue
+            else:
+                keys_p, vals_p, counts_p, ovf = dist._partitioned_sharded_impl(
+                    ex.mesh, keys, vals, kind=self._agg.kind,
+                    max_groups=max_groups, axis=ex.axis,
+                    preagg_capacity=ex.preagg_capacity,
+                    partition_capacity=partition_capacity,
+                )
+                self.raw = (keys_p, vals_p, counts_p, ovf)
+                count = jnp.sum(counts_p)
+                overflow_rows = ovf
+            if p.saturation == SaturationPolicy.UNCHECKED:
+                return max_groups, count
+            if overflow_rows is not None and int(jax.device_get(jnp.sum(overflow_rows))) > 0:
+                # GROW: double the per-partition bucket capacity and re-run
+                # the exchange.  One partition can at most receive every
+                # entry a device emits, so the doubling is bounded.
+                ndev = max(ex.mesh.shape[ex.axis], 1)
+                limit = ex.preagg_capacity + keys.shape[0] // ndev
+                base = partition_capacity or (2 * limit // ndev)
+                if p.saturation != SaturationPolicy.GROW or base >= limit:
+                    raise GroupByOverflowError(
+                        "partitioned exchange dropped rows (partition bucket "
+                        "overflow); raise ExecutionPolicy.partition_capacity "
+                        "or use SaturationPolicy.GROW"
+                    )
+                partition_capacity = min(2 * base, limit)
+                continue
+            issued = int(jax.device_get(count))
+            if issued <= max_groups:
+                return max_groups, count
+            if p.saturation == SaturationPolicy.RAISE or max_groups >= self._rows:
+                raise _overflow_error(issued, max_groups)
+            max_groups = _next_bound(max_groups, self._rows, issued=issued)
+
+    def finalize(self) -> Table:
+        max_groups, count = self.finalize_raw()
+        if self._plan.execution.shard_merge == "dense_psum":
+            kbt, acc = self.raw.keys, self.raw.values
+        else:
+            # Unify the per-partition outputs: stable compaction of each
+            # owner's valid prefix (partitions are disjoint, so the keys
+            # are globally unique).  Pure jnp — no host round-trip.
+            keys_p, vals_p, counts_p, _ = self.raw
+            ndev = self._plan.execution.mesh.shape[self._plan.execution.axis]
+            per_dev = keys_p.shape[0] // ndev
+            idx = jnp.arange(keys_p.shape[0])
+            valid = (idx % per_dev) < jnp.take(counts_p.reshape(-1), idx // per_dev)
+            order = jnp.argsort(~valid, stable=True)
+            kbt = jnp.take(keys_p.reshape(-1), order)[:max_groups]
+            acc = jnp.take(vals_p.reshape(-1), order)[:max_groups]
+        return build_result_table(
+            self._plan.aggs, lambda c, k: acc, kbt, count, max_groups,
+        )
+
+
+__all__ = ["make_executor", "resolve_plan"]

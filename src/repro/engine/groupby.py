@@ -50,11 +50,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import adaptive, resize
+from repro.core import resize
 from repro.core import ticketing as tk
 from repro.core import updates as up
-from repro.core.hashing import EMPTY_KEY
-from repro.engine.columns import Table, combine_keys
+from repro.core.hashing import EMPTY_KEY, table_capacity
+from repro.engine.columns import Table, chunk_key_column
 from repro.engine.morsels import DEFAULT_MORSEL_ROWS, morselize_chunk
 
 
@@ -72,8 +72,42 @@ class AggSpec:
         return f"{self.kind}({self.column or '*'})"
 
 
-@functools.partial(jax.jit, static_argnames=("update_fn", "load_factor"))
-def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor):
+def build_result_table(aggs, get_acc, key_by_ticket, count, max_groups) -> Table:
+    """THE uniform GROUP BY result layout, shared by the engine operator and
+    every executor strategy: keys in ticket order, one materialized column
+    per aggregate (mean composed from sum/count, min/max identities → NaN),
+    and the broadcast group count."""
+    n = key_by_ticket.shape[0]
+    if n < max_groups:
+        pad = jnp.full((max_groups - n,), EMPTY_KEY, jnp.uint32)
+        key_by_ticket = jnp.concatenate([key_by_ticket.astype(jnp.uint32), pad])
+    out = {"key": key_by_ticket[:max_groups]}
+    for a in aggs:
+        if a.kind == "mean":
+            out[a.name] = up.finalize(
+                "mean", get_acc(a.column, "sum"), get_acc(a.column, "count")
+            )
+        else:
+            out[a.name] = up.finalize(a.kind, get_acc(a.column, a.kind))
+    count = jnp.asarray(count, jnp.int32).reshape(())
+    out["__num_groups__"] = jnp.broadcast_to(count, (max_groups,))
+    return Table(out)
+
+
+def expand_agg_specs(aggs: Sequence[AggSpec]) -> tuple:
+    """Deduplicated ``(column, kind)`` accumulator specs for a query's aggs
+    (``mean`` decomposes into sum+count, composed back at materialization)."""
+    specs = []
+    for a in aggs:
+        kinds = ("sum", "count") if a.kind == "mean" else (a.kind,)
+        for k in kinds:
+            specs.append((a.column, k))
+    return tuple(dict.fromkeys(specs))
+
+
+@functools.partial(jax.jit, static_argnames=("update_fn", "load_factor", "checked"))
+def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor,
+                  checked=True):
     """One fused pass over a chunk's morsels: scan (probe→ticket→update).
 
     Morsels with index < ``start`` are skipped (resume support).  Before each
@@ -81,6 +115,12 @@ def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor):
     needs growth (load factor crossed) or fails to fully ticket (probe table
     saturated), the scan pauses: that morsel and everything after become
     no-ops and its index is flagged in the returned per-morsel ``halts``.
+
+    ``checked=False`` is the paper's perfect-estimate regime: no growth or
+    saturation checks trace at all — the table never migrates, every morsel
+    commits, rows that fail to ticket (ticket -1) are parked by the update
+    masks, and the returned ``halts`` are constant-false so the host never
+    needs to read them (zero blocking syncs).
     """
     capacity = table.capacity
     threshold = int(load_factor * capacity)
@@ -89,6 +129,14 @@ def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor):
         table, state, halted = carry
         idx, keys, vals = xs
         wants = idx >= start
+        if not checked:
+            mkeys = jnp.where(wants, keys, jnp.uint32(EMPTY_KEY))
+            tickets, table = tk.get_or_insert(table, mkeys)
+            new_state = up.update_agg_state(state, tickets, vals, update_fn)
+            state = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(wants, new, old), new_state, state
+            )
+            return (table, state, halted), jnp.zeros((), jnp.bool_)
         # Pre-morsel pause check — the host loop's maybe_resize, in-scan.
         halt_grow = wants & ~halted & (table.count > threshold)
         halted = halted | halt_grow
@@ -125,18 +173,16 @@ class GroupByOperator:
     use_kernel: bool = False          # route updates through the Pallas kernels
     load_factor: float = 0.5
     pipeline: str = "scan"            # scan (compiled) | host (reference loop)
+    capacity: int | None = None       # probe-table slots; None → table_capacity
+    raw_keys: bool = False            # single pre-hashed uint32 key column
+    check_overflow: bool = True       # False = paper's perfect-estimate regime
 
     def __post_init__(self):
-        cap = 16
-        while cap < 2 * self.max_groups:
-            cap *= 2
+        cap = self.capacity or table_capacity(self.max_groups, self.load_factor)
         self._table = tk.make_table(cap, max_groups=self.max_groups)
-        specs = []
-        for a in self.aggs:
-            kinds = ("sum", "count") if a.kind == "mean" else (a.kind,)
-            for k in kinds:
-                specs.append((a.column, k))
-        self._state = up.init_agg_state(specs, self.max_groups)
+        if self.raw_keys:
+            assert len(self.key_columns) == 1, "raw_keys needs exactly one key column"
+        self._state = up.init_agg_state(expand_agg_specs(self.aggs), self.max_groups)
         if self.use_kernel:
             from repro.kernels import ops as kops
 
@@ -155,19 +201,25 @@ class GroupByOperator:
         (selection-vector idiom): their combined key becomes the EMPTY
         sentinel, which ticketing skips.
         """
-        if self._overflowed:
+        if self._overflowed and self.check_overflow:
             return  # poisoned: skip the scan, finalize raises anyway
-        cols = dict(chunk.columns)
-        mask = cols.pop("__mask__", None)
-        keys = combine_keys(*(cols[c] for c in self.key_columns))
-        if mask is not None:
-            keys = jnp.where(mask, keys, jnp.uint32(EMPTY_KEY))
+        keys, cols = chunk_key_column(chunk, self.key_columns, self.raw_keys)
         value_cols = sorted({c for c, _ in self._state.specs if c is not None})
         km, vm, num = morselize_chunk(
             keys, {c: cols[c] for c in value_cols}, self.morsel_rows
         )
         if self.pipeline == "host":
             self._consume_host_loop(km, vm, num)
+            return
+        if not self.check_overflow:
+            # Perfect-estimate regime (unchecked): one pass, fixed capacity,
+            # no migrations and NO blocking sync — rows past the bound (or a
+            # saturated probe table) drop, exactly the legacy jitted paths.
+            self._table, self._state, _ = _consume_scan(
+                self._table, self._state, km, vm, jnp.int32(0),
+                update_fn=self._update_fn, load_factor=self.load_factor,
+                checked=False,
+            )
             return
         start = 0
         while True:
@@ -192,13 +244,17 @@ class GroupByOperator:
 
     def _consume_host_loop(self, km, vm, num) -> None:
         """Reference pipeline (the pre-scan implementation): one eager Python
-        iteration per morsel with a blocking host-side resize check."""
+        iteration per morsel with a blocking host-side resize check.  With
+        ``check_overflow=False`` the resize check and saturation replay are
+        skipped so both pipelines share the unchecked contract (fixed
+        capacity, rows past a saturated table drop)."""
         for i in range(num):
-            self._table = resize.maybe_resize(self._table, self.load_factor)
+            if self.check_overflow:
+                self._table = resize.maybe_resize(self._table, self.load_factor)
             tickets, self._table = tk.get_or_insert(self._table, km[i])
             # Saturation recovery (bounded probe loop's ticket==-1 contract):
             # migrate and replay the morsel, same as the scan path's pause.
-            while bool(
+            while self.check_overflow and bool(
                 jax.device_get(jnp.any((tickets < 0) & (km[i] != jnp.uint32(EMPTY_KEY))))
             ):
                 self._table = resize.migrate(self._table, 2 * self._table.capacity)
@@ -215,24 +271,19 @@ class GroupByOperator:
         distinct keys — tickets past the bound had their key/accumulator
         scatters dropped, so a truncated result would be silent data loss.
         """
-        if self._overflowed or bool(jax.device_get(self._table.overflowed)):
+        if self.check_overflow and (
+            self._overflowed or bool(jax.device_get(self._table.overflowed))
+        ):
             raise GroupByOverflowError(
                 f"GROUP BY overflow: {int(self._table.count)} distinct keys "
                 f"exceed max_groups={self.max_groups}; groups past the bound "
                 "were dropped. Re-run with a larger max_groups (or a better "
                 "cardinality estimate)."
             )
-        n = self._table.count
-        out = {"key": self._table.key_by_ticket}
-        for a in self.aggs:
-            if a.kind == "mean":
-                s = self._state.get(a.column, "sum")
-                c = self._state.get(a.column, "count")
-                out[a.name] = up.finalize("mean", s, c)
-            else:
-                out[a.name] = up.finalize(a.kind, self._state.get(a.column, a.kind))
-        out["__num_groups__"] = jnp.broadcast_to(n, (self._table.max_groups,))
-        return Table(out)
+        return build_result_table(
+            self.aggs, self._state.get, self._table.key_by_ticket,
+            self._table.count, self._table.max_groups,
+        )
 
     @property
     def num_groups(self):
@@ -247,33 +298,24 @@ def groupby(
     max_groups: int | None = None,
     update: str | None = None,
     morsel_rows: int = DEFAULT_MORSEL_ROWS,
+    strategy: str = "auto",
+    saturation: str | None = None,
 ) -> Table:
     """One-shot GROUP BY with adaptive strategy selection (paper's
-    recommended optimizer integration: estimate → choose → run)."""
-    keycol = combine_keys(*(table[c] for c in keys))
-    n = keycol.shape[0]
-    estimated = max_groups is None
-    if max_groups is None or update is None:
-        stats = adaptive.sample_stats(keycol)
-        plan = adaptive.choose_plan(stats)
-        if max_groups is None:
-            # 2× headroom over the estimate, never above the row count
-            # (there cannot be more groups than rows), never below 1.
-            max_groups = max(1, min(max(stats.est_groups * 2, 64), n))
-        update = update or plan.update
-    while True:
-        op = GroupByOperator(
-            key_columns=list(keys), aggs=list(aggs), max_groups=max_groups,
-            update=update, morsel_rows=morsel_rows,
-        )
-        op.consume(table)
-        try:
-            return op.finalize()
-        except GroupByOverflowError:
-            # A sample estimate cannot see a long tail (e.g. zipf): when the
-            # bound was ours, not the caller's, grow it and re-run rather
-            # than surface an error about a parameter nobody passed.
-            # max_groups == n always suffices, so this terminates.
-            if not estimated or max_groups >= n:
-                raise
-            max_groups = min(max(4 * max_groups, 64), n)
+    recommended optimizer integration: estimate → choose → run).
+
+    Adapter over the :class:`~repro.engine.plan_api.GroupByPlan` front door:
+    builds a plan (``strategy="auto"`` → sample stats → planner choice) and
+    executes it.  ``saturation=None`` defers to the plan API's default:
+    ``grow`` when ``max_groups`` is estimated (a sample cannot see a long
+    tail, so the executor recovers instead of surfacing an error about a
+    parameter nobody passed), ``raise`` for an explicit caller bound.
+    """
+    from repro.engine.plan_api import ExecutionPolicy, GroupByPlan, execute
+
+    plan = GroupByPlan(
+        keys=tuple(keys), aggs=tuple(aggs), strategy=strategy,
+        max_groups=max_groups, saturation=saturation,
+        execution=ExecutionPolicy(update=update, morsel_rows=morsel_rows),
+    )
+    return execute(plan, table)

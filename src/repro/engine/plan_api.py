@@ -1,0 +1,207 @@
+"""The one front door for GROUP BY: a declarative plan → executor API.
+
+The paper's central claim is that *one* purpose-built concurrent hash table
+serves every GROUP BY regime (cardinality, skew, parallelism).  This module
+makes that the architecture: every aggregation entry point in the repo —
+the engine operator, the concurrent/partitioned/hybrid library paths, the
+mesh-sharded variants and the Pallas kernel route — is reached through a
+single declarative :class:`GroupByPlan` that lowers to one executor
+protocol (``open → consume → finalize``, engine/executors.py) built on the
+scan-compiled morsel pipeline.  Strategy choice is a *planner decision
+behind a stable API* (Vaghasiya & Jahangiri), not seven different function
+calls: sweeping strategies is a one-field change.
+
+    plan = GroupByPlan(
+        keys=["store", "item"],
+        aggs=[AggSpec("count"), AggSpec("mean", "price")],
+        strategy="auto",            # or concurrent|partitioned|hybrid|pallas|sharded
+        saturation=SaturationPolicy.GROW,
+    )
+    result = plan.run(sales)        # Table: key, count(*), mean(price), __num_groups__
+
+Saturation (a misestimated ``max_groups``) is a *policy*, not an accident of
+which entry point you called:
+
+  * ``raise``     — finalize raises :class:`GroupByOverflowError` instead of
+    silently truncating (the default; truncated output is data loss).
+  * ``grow``      — the executor recovers: grow the bound, migrate/replay,
+    finalize again (the engine's §4.4 pause-migrate-resume generalized to
+    every strategy — previously only ``engine.groupby`` could recover).
+  * ``unchecked`` — the paper's perfect-estimate regime: fixed capacity,
+    no migrations, no overflow check and no blocking device sync; rows
+    past the bound (or a saturated probe table) drop.
+
+The seven legacy entry points survive as thin adapters over this API with
+identical signatures (`concurrent_groupby`, `partitioned_groupby`,
+`hybrid_groupby`, the two sharded variants, `groupby_pallas`, and
+`engine.groupby.groupby`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+
+from repro.engine.columns import Table
+from repro.engine.groupby import AggSpec, GroupByOverflowError, expand_agg_specs
+from repro.engine.morsels import DEFAULT_MORSEL_ROWS
+
+STRATEGIES = ("auto", "concurrent", "partitioned", "hybrid", "pallas", "sharded")
+
+
+class SaturationPolicy:
+    """What to do when the stream holds more distinct keys than planned."""
+
+    RAISE = "raise"          # refuse to materialize truncated results
+    GROW = "grow"            # migrate-and-replay recovery, then materialize
+    UNCHECKED = "unchecked"  # paper's perfect-estimate regime: no check
+
+    ALL = (RAISE, GROW, UNCHECKED)
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    """How a plan runs — knobs that tune an executor without changing *what*
+    it computes.  Every field has a sensible default; strategies ignore the
+    fields that do not apply to them.
+    """
+
+    pipeline: str = "scan"            # scan (compiled) | host (reference loop)
+    morsel_rows: int = DEFAULT_MORSEL_ROWS
+    update: str | None = None         # scatter|onehot|sort_segment|serialized; None → planner
+    load_factor: float = 0.5
+    capacity: int | None = None       # probe-table slots; None → hashing.table_capacity
+    use_kernel: bool = False          # concurrent: Pallas segment-update scan body
+    ticketing: str = "hash"           # concurrent: hash | sort | direct
+    key_domain: int | None = None     # direct ticketing: bounded key domain
+    # pallas strategy
+    morsel_size: int = 1024           # kernel grid morsel
+    interpret: bool | None = None     # None → auto (False on TPU)
+    # partitioned strategy
+    num_workers: int = 8
+    preagg_capacity: int = 1024
+    preagg_morsel: int | None = None  # None → one morsel per worker chunk
+    # sharded strategy
+    mesh: Any = None
+    axis: str = "data"
+    shard_merge: str = "dense_psum"   # dense_psum | all_to_all
+    max_local_groups: int | None = None
+    partition_capacity: int | None = None
+    # hybrid strategy
+    num_registers: int = 8
+    heavy_keys: Any = None            # precomputed heavy hitters; None → detect
+
+
+@dataclass(frozen=True)
+class GroupByPlan:
+    """Declarative GROUP BY specification.
+
+    Attributes:
+      keys: grouping key column names (hash-combined unless ``raw_keys``).
+      aggs: list of :class:`AggSpec` (sum/count/min/max/mean over columns).
+      strategy: ``auto`` (planner decides from sample statistics) or one of
+        ``concurrent | partitioned | hybrid | pallas | sharded``.
+      max_groups: cardinality bound; None → estimated from a sample.
+      saturation: :class:`SaturationPolicy` — raise | grow | unchecked.
+        None (default) resolves to ``grow`` when ``max_groups`` is
+        estimated (a sample cannot see a long tail, so the bound must be
+        allowed to recover) and ``raise`` when it is an explicit caller
+        contract.
+      execution: :class:`ExecutionPolicy` tuning knobs.
+      raw_keys: the single key column already IS the uint32 hash-key space
+        (EMPTY_KEY sentinel reserved) — skip ``combine_keys``.  Used by the
+        legacy array-based adapters.
+    """
+
+    keys: Sequence[str]
+    aggs: Sequence[AggSpec]
+    strategy: str = "auto"
+    max_groups: int | None = None
+    saturation: str | None = None
+    execution: ExecutionPolicy = field(default_factory=ExecutionPolicy)
+    raw_keys: bool = False
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {self.strategy!r}; available: {STRATEGIES}"
+            )
+        if self.saturation is not None and self.saturation not in SaturationPolicy.ALL:
+            raise ValueError(
+                f"unknown saturation policy {self.saturation!r}; "
+                f"available: {SaturationPolicy.ALL}"
+            )
+        if not self.aggs:
+            raise ValueError("at least one AggSpec required")
+        if not self.keys:
+            raise ValueError("at least one key column required")
+
+    def with_(self, **kw) -> "GroupByPlan":
+        """Copy with fields replaced (sweep convenience)."""
+        return replace(self, **kw)
+
+    def run(self, table: Table) -> Table:
+        return execute(self, table)
+
+
+def execute(plan: GroupByPlan, table: Table) -> Table:
+    """One-shot execution: the whole table as a single pipeline chunk.
+
+    For streaming (morsel-driven) execution, use
+    :func:`repro.engine.executors.make_executor` directly and feed chunks
+    through ``consume`` — this is exactly what ``engine.plans.Aggregate``
+    does.
+    """
+    from repro.engine.executors import make_executor
+
+    ex = make_executor(plan)
+    ex.open()
+    ex.consume(table)
+    return ex.finalize()
+
+
+def value_columns(aggs: Sequence[AggSpec]) -> tuple:
+    """Sorted value-column names a query's aggregates read."""
+    return tuple(sorted({c for c, _ in expand_agg_specs(aggs) if c is not None}))
+
+
+def as_group_result(out: Table, agg: AggSpec):
+    """Convert the uniform ``Table`` result to the legacy ``GroupByResult``
+    (keys in ticket order, one aggregate vector, scalar group count)."""
+    from repro.core.aggregation import GroupByResult
+
+    return GroupByResult(out["key"], out[agg.name], out["__num_groups__"][0])
+
+
+def arrays_as_table(keys: jnp.ndarray, values: jnp.ndarray | None) -> tuple:
+    """Canonicalize the legacy array-based calling convention
+    ``(keys, values?)`` into a (Table, value-column-names) pair for a
+    ``raw_keys`` plan.  2-D values become one column per trailing dim (the
+    executor aggregates each independently; adapters re-stack)."""
+    keys = keys.reshape(-1).astype(jnp.uint32)
+    n = keys.shape[0]
+    if values is None:
+        values = jnp.ones((n,), jnp.float32)
+    if values.ndim > 1 and values.reshape(n, -1).shape[1] > 1:
+        values = values.reshape(n, -1)
+        cols = {f"v{i}": values[:, i].astype(jnp.float32) for i in range(values.shape[1])}
+    else:
+        # (N,) and width-1 (N,1) blocks both map to the canonical "v" column
+        # (every single-aggregate adapter hardcodes AggSpec(kind, "v"))
+        cols = {"v": values.reshape(-1).astype(jnp.float32)}
+    return Table({"__key__": keys, **cols}), tuple(cols)
+
+
+__all__ = [
+    "AggSpec",
+    "ExecutionPolicy",
+    "GroupByOverflowError",
+    "GroupByPlan",
+    "SaturationPolicy",
+    "STRATEGIES",
+    "arrays_as_table",
+    "as_group_result",
+    "execute",
+    "value_columns",
+]

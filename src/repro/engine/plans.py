@@ -4,6 +4,11 @@ Enough of a planner to express the paper's workload (scan → [filter] →
 group-by aggregate) and the framework's internal analytics (token stats,
 routing stats).  Operators are composed push-style: each chunk flows
 scan → filter → aggregate, mirroring morsel-driven pipelining.
+
+``Aggregate`` lowers to the declarative :class:`GroupByPlan` front door
+(engine/plan_api.py) and streams chunks through its executor — a strategy
+sweep over the same query is a one-field change (``strategy=``), and the
+saturation policy is explicit instead of an accident of the entry point.
 """
 from __future__ import annotations
 
@@ -13,7 +18,9 @@ from typing import Callable, Sequence
 import jax.numpy as jnp
 
 from repro.engine.columns import Table
-from repro.engine.groupby import AggSpec, GroupByOperator
+from repro.engine.executors import make_executor
+from repro.engine.groupby import AggSpec
+from repro.engine.plan_api import ExecutionPolicy, GroupByPlan
 
 
 @dataclass
@@ -46,16 +53,31 @@ class Filter:
 class Aggregate:
     keys: Sequence[str]
     aggs: Sequence[AggSpec]
-    max_groups: int
-    update: str = "scatter"
+    max_groups: int | None = None
+    update: str | None = None       # None → ExecutionPolicy/planner choice
+    strategy: str = "concurrent"
+    saturation: str | None = None   # None → grow if bound estimated, else raise
+    execution: ExecutionPolicy | None = None
+
+    def plan(self) -> GroupByPlan:
+        execution = self.execution or ExecutionPolicy()
+        if self.update is not None:
+            from dataclasses import replace
+
+            execution = replace(execution, update=self.update)
+        # saturation=None defers to the plan API's default (grow when the
+        # bound is estimated, raise when explicit)
+        return GroupByPlan(
+            keys=tuple(self.keys), aggs=tuple(self.aggs),
+            strategy=self.strategy, max_groups=self.max_groups,
+            saturation=self.saturation, execution=execution,
+        )
 
     def run(self, plan_source: Scan, filt: Filter | None = None) -> Table:
-        op = GroupByOperator(
-            key_columns=list(self.keys), aggs=list(self.aggs),
-            max_groups=self.max_groups, update=self.update,
-        )
+        ex = make_executor(self.plan())
+        ex.open()
         for chunk in plan_source.chunks():
             if filt is not None:
                 chunk = filt.apply(chunk)  # adds __mask__; consume() handles it
-            op.consume(chunk)
-        return op.finalize()
+            ex.consume(chunk)
+        return ex.finalize()

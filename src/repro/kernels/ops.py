@@ -135,46 +135,43 @@ def groupby_pallas(
     update_strategy: str = "scatter",
     interpret: bool | None = None,
     raise_on_overflow: bool = True,
+    saturation: str | None = None,
 ):
-    """Kernel-backed fully concurrent GROUP BY (paper Fig. 2 end-to-end).
+    """Kernel-backed fully concurrent GROUP BY (paper Fig. 2 end-to-end) —
+    adapter over ``GroupByPlan(strategy="pallas")``; the kernel pipeline
+    (ticket → segment update → materialize) runs behind the executor seam.
 
-    With ``raise_on_overflow`` (default) the returned ticket count is checked
-    against ``max_groups`` on the host and a RuntimeError is raised when the
-    stream held more distinct keys — the kernel's ``key_by_ticket``/acc
-    scatters past the bound are dropped, so the materialization would
-    otherwise be silently truncated.  Pass False to skip the one blocking
-    device sync this costs (e.g. in throughput benchmarks).
+    ``raise_on_overflow`` (default) maps to ``saturation="raise"``: the
+    returned ticket count is checked against ``max_groups`` on the host and
+    a RuntimeError is raised when the stream held more distinct keys — the
+    kernel's ``key_by_ticket``/acc scatters past the bound are dropped, so
+    the materialization would otherwise be silently truncated.  Pass False
+    (= ``saturation="unchecked"``) to skip the blocking device sync this
+    costs (e.g. in throughput benchmarks), or ``saturation="grow"`` to
+    recover by re-launching with a grown bound.
     """
-    if capacity is None:
-        capacity = 16
-        while capacity < 2 * max_groups:
-            capacity *= 2
-    if values is None:
-        values = jnp.ones_like(keys, dtype=jnp.float32)
-    tickets, key_by_ticket, count = ticket(
-        keys, capacity=capacity, max_groups=max_groups,
-        morsel_size=morsel_size, interpret=interpret,
+    from repro.engine.plan_api import (
+        AggSpec,
+        ExecutionPolicy,
+        GroupByPlan,
+        arrays_as_table,
+        execute,
     )
-    acc = segment_aggregate(
-        tickets, values, num_groups=max_groups, kind=kind,
-        strategy=update_strategy, morsel_size=morsel_size, interpret=interpret,
+
+    if saturation is None:
+        saturation = "raise" if raise_on_overflow else "unchecked"
+    table, _ = arrays_as_table(keys, values)
+    agg = AggSpec("count") if kind == "count" else AggSpec(kind, "v")
+    plan = GroupByPlan(
+        keys=("__key__",), aggs=(agg,), strategy="pallas",
+        max_groups=max_groups, saturation=saturation, raw_keys=True,
+        execution=ExecutionPolicy(
+            capacity=capacity, morsel_size=morsel_size,
+            update=update_strategy, interpret=interpret,
+        ),
     )
-    if kind in ("min", "max"):
-        acc = jnp.where(jnp.isinf(acc), jnp.nan, acc)
-    if raise_on_overflow:
-        issued = int(jax.device_get(count))
-        dropped = bool(jax.device_get(jnp.any(
-            (tickets < 0) & (keys.astype(jnp.uint32) != EMPTY_KEY)
-        )))
-        if issued > max_groups or dropped:
-            raise RuntimeError(
-                f"GROUP BY overflow: {issued} tickets issued against "
-                f"max_groups={max_groups}"
-                + (" and the probe table saturated (rows dropped)" if dropped else "")
-                + "; results would be truncated. Re-run with a larger "
-                "max_groups/capacity."
-            )
-    return key_by_ticket, acc, count
+    out = execute(plan, table)
+    return out["key"], out[agg.name], out["__num_groups__"][0]
 
 
 def multi_block_ticket(

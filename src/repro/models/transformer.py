@@ -299,9 +299,9 @@ def _embed_tokens(p, cfg: ModelConfig, tokens, *, ticketed: bool, max_unique: in
         oh = jax.nn.one_hot(tokens.reshape(-1), table.shape[0], dtype=dtype)
         x = (oh @ table).reshape(*tokens.shape, -1)
     elif ticketed:
-        cap = 16
-        while cap < 2 * max_unique:
-            cap *= 2
+        from repro.core.hashing import table_capacity
+
+        cap = table_capacity(max_unique)
         x = ticketed_embed(p["embed"]["table"], tokens, max_unique, cap).astype(dtype)
     else:
         x = embed(p["embed"], tokens, dtype)

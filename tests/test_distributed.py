@@ -79,6 +79,7 @@ print(json.dumps({"ok": bool(ok)}))
     assert res["ok"]
 
 
+@pytest.mark.slow
 def test_manual_dp_train_step_with_compression():
     res = run_with_devices(8, """
 import json

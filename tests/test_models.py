@@ -23,6 +23,7 @@ def make_batch(cfg, key, shifted=True):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_forward_smoke(arch):
     cfg = get_config(arch, reduced=True)
@@ -33,6 +34,7 @@ def test_forward_smoke(arch):
     assert bool(jnp.all(jnp.isfinite(out.logits)))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_train_step_smoke(arch):
     cfg = get_config(arch, reduced=True)
@@ -72,6 +74,7 @@ def test_ticketed_embedding_grad_equals_dense():
     np.testing.assert_allclose(t1, t2, rtol=2e-2, atol=5e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["gemma2_2b", "granite_moe_1b_a400m", "zamba2_1_2b", "rwkv6_1_6b"])
 def test_decode_prefix_consistency(arch):
     cfg = get_config(arch, reduced=True)

@@ -46,12 +46,14 @@ def _prefill_then_twobuf(cfg, quantize_prefix=False):
     return rel
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen2_5_14b", "gemma2_2b"])
 def test_twobuf_decode_matches_single_buffer(arch):
     cfg = get_config(arch, reduced=True)
     assert _prefill_then_twobuf(cfg) < 0.05
 
 
+@pytest.mark.slow
 def test_twobuf_decode_with_int8_prefix():
     cfg = get_config("qwen2_5_14b", reduced=True)
     # W8A8 path: quantization noise allowed, but must stay sane

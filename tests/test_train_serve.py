@@ -15,6 +15,7 @@ from repro.serve.engine import Request, ServeLoop
 from repro.train.loop import TrainHParams, make_train_step, train_loop
 
 
+@pytest.mark.slow
 def test_loss_decreases_tiny_model():
     cfg = get_config("qwen3_0_6b", reduced=True)
     hp = TrainHParams(peak_lr=3e-3, warmup=5, total_steps=100, ticketed_embedding=True)
@@ -71,6 +72,7 @@ def test_checkpoint_atomic_commit(tmp_path):
     assert mgr.latest_step() == 1
 
 
+@pytest.mark.slow
 def test_train_loop_resumes_from_checkpoint(tmp_path):
     cfg = get_config("qwen3_0_6b", reduced=True)
     hp = TrainHParams(peak_lr=1e-3, warmup=2, total_steps=50, ticketed_embedding=False)
@@ -88,6 +90,7 @@ def test_train_loop_resumes_from_checkpoint(tmp_path):
     assert int(opt2.step) == 6
 
 
+@pytest.mark.slow
 def test_serve_loop_greedy_generation():
     cfg = get_config("qwen3_0_6b", reduced=True)
     params = tf.init_params(jax.random.PRNGKey(0), cfg)
