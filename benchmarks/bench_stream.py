@@ -1,0 +1,174 @@
+"""Streaming ingest benchmark — the PR's acceptance gates, measurable.
+
+Three comparisons over the same multi-chunk stream:
+
+  * ``stream_vs_oneshot`` — ``plan.collect(chunks)`` vs ``plan.run(table)``
+    on the concurrent strategy (identical scan work; the streaming path
+    must be ≈ parity);
+  * ``overlap`` — double-buffered ingest (prefetch=2) vs fully synchronous
+    ingest (prefetch=0) on the checked pipeline, with real host-side
+    staging cost per chunk (the source generates its keys on demand) — the
+    poll is the serialization point the prefetch window hides;
+  * ``sharded`` — streaming carried-state ingest vs the buffered PR-2 path
+    (``ExecutionPolicy.sharded_ingest``) on simulated devices, reporting
+    peak host RSS and the executor's retained-chunk high-water mark
+    alongside wall-clock (each mode runs in its OWN subprocess so the RSS
+    high-water is per-mode).
+
+Emits ``common.emit`` CSV; ``--json PATH`` additionally writes the raw
+numbers as a JSON artifact (CI uploads ``BENCH_stream.json`` per PR to
+track the perf trajectory).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import N_ROWS, emit, gen_keys, run_in_devices, time_fn
+from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy, Table
+
+CHUNKS = 8
+
+_SHARDED_CODE = """
+import json, resource, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy, Table
+
+n, chunks, ingest = %(n)d, %(chunks)d, %(ingest)r
+rng = np.random.default_rng(3)
+keys = rng.integers(0, 1000, size=n).astype(np.uint32)
+vals = rng.normal(size=n).astype(np.float32)
+mesh = jax.make_mesh((8,), ("data",))
+plan = GroupByPlan(
+    keys=("k",), aggs=(AggSpec("sum", "v"),), strategy="sharded",
+    max_groups=1024, saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
+    execution=ExecutionPolicy(mesh=mesh, axis="data", sharded_ingest=ingest),
+)
+step = n // chunks
+def source():
+    for i in range(0, n, step):
+        yield Table({"k": jnp.asarray(keys[i:i+step]), "v": jnp.asarray(vals[i:i+step])})
+# warmup (compile), then timed run
+jax.block_until_ready(plan.collect(source()).columns)
+t0 = time.perf_counter()
+handle = plan.stream(source())
+out = handle.result()
+jax.block_until_ready(out.columns)
+dt = time.perf_counter() - t0
+print(json.dumps({
+    "us": dt * 1e6,
+    "peak_rss_mb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0,
+    "peak_buffered_chunks": handle.peak_buffered_chunks,
+    "groups": int(out["__num_groups__"][0]),
+}))
+"""
+
+
+def _chunked(keys, vals, chunks=CHUNKS):
+    step = keys.shape[0] // chunks
+    for i in range(0, keys.shape[0], step):
+        yield Table({"k": keys[i:i + step], "v": vals[i:i + step]})
+
+
+def _staged_source(n, chunks, seed=5):
+    """A source with real per-chunk host staging cost: keys are generated
+    on demand (numpy RNG), the work the prefetch window overlaps with the
+    in-flight device scan."""
+    rng = np.random.default_rng(seed)
+    step = n // chunks
+    for _ in range(chunks):
+        k = rng.integers(0, 10_000, size=step).astype(np.uint32)
+        v = rng.normal(size=step).astype(np.float32)
+        yield Table({"k": jnp.asarray(k), "v": jnp.asarray(v)})
+
+
+def run(n: int | None = None, json_path: str | None = None):
+    n = n or N_ROWS
+    results = {}
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(gen_keys(n, "low", "uniform"))
+    vals = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    table = Table({"k": keys, "v": vals})
+
+    # --- stream vs one-shot (concurrent, unchecked: the pure pipeline) ----
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("sum", "v"),), max_groups=1024,
+        saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
+        strategy="concurrent",
+    )
+    us_one = time_fn(lambda: plan.run(table).columns)
+    us_stream = time_fn(lambda: plan.collect(_chunked(keys, vals)).columns)
+    results["oneshot_us"] = us_one
+    results["stream_us"] = us_stream
+    emit("stream_oneshot", us_one, f"n={n}")
+    emit("stream_chunked", us_stream, f"chunks={CHUNKS}")
+    emit("stream_vs_oneshot_ratio", us_stream / max(us_one, 1e-9), "≈1 expected")
+
+    # --- overlap on/off (checked pipeline + host staging per chunk) -------
+    grow_plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("sum", "v"),), max_groups=16_384,
+        saturation=SaturationPolicy.GROW, raw_keys=True, strategy="concurrent",
+    )
+    for pf in (0, 2):
+        # time_fn's warmup also pre-compiles the scan for this chunk shape
+        us = time_fn(
+            lambda pf=pf: grow_plan.stream(
+                _staged_source(n, CHUNKS), prefetch=pf
+            ).result().columns,
+            warmup=1, runs=3,
+        )
+        results[f"overlap_prefetch{pf}_us"] = us
+        emit(f"stream_prefetch{pf}", us, "double-buffered" if pf else "synchronous")
+    results["overlap_speedup"] = (
+        results["overlap_prefetch0_us"] / max(results["overlap_prefetch2_us"], 1e-9)
+    )
+    emit("stream_overlap_speedup", results["overlap_speedup"], ">1 = overlap pays")
+
+    # --- buffered vs streaming sharded (8 simulated devices) --------------
+    for ingest in ("buffered", "stream"):
+        try:
+            res = run_in_devices(
+                8, _SHARDED_CODE % dict(n=min(n, 1 << 19), chunks=CHUNKS,
+                                        ingest=ingest),
+            )
+        except RuntimeError as e:  # noqa: BLE001 — report, don't abort suite
+            emit(f"stream_sharded_{ingest}_FAILED", -1,
+                 str(e).splitlines()[-1][:80].replace(",", ";"))
+            continue
+        results[f"sharded_{ingest}"] = res
+        emit(
+            f"stream_sharded_{ingest}", res["us"],
+            f"rss={res['peak_rss_mb']:.0f}MB "
+            f"buffered_chunks={res['peak_buffered_chunks']} "
+            f"groups={res['groups']}",
+        )
+    if "sharded_buffered" in results and "sharded_stream" in results:
+        ratio = results["sharded_buffered"]["us"] / max(
+            results["sharded_stream"]["us"], 1e-9
+        )
+        results["sharded_stream_speedup"] = ratio
+        emit("stream_sharded_speedup", ratio, "≥1 = streaming ≥ parity PASS"
+             if ratio >= 1.0 else "<1 = streaming slower")
+
+    if json_path:
+        results["n_rows"] = n
+        results["chunks"] = CHUNKS
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write BENCH_stream.json here")
+    ap.add_argument("--rows", type=int, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived", flush=True)
+    run(n=args.rows, json_path=args.json)

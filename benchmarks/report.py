@@ -2,8 +2,10 @@
 
   PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
 
-Prints markdown: §Dry-run (memory + collectives per cell, both meshes) and
-§Roofline (three terms, bottleneck, useful-flops fraction — single-pod).
+Prints markdown: §Dry-run (memory + collectives per cell, both meshes),
+§Roofline (three terms, bottleneck, useful-flops fraction — single-pod) and
+§Streaming (bench_stream's BENCH_stream.json artifact: stream-vs-one-shot,
+ingest-overlap and buffered-vs-streaming-sharded numbers, incl. peak RSS).
 """
 from __future__ import annotations
 
@@ -58,10 +60,40 @@ def roofline_table(cells):
         )
 
 
+def streaming_table(path):
+    with open(path) as f:
+        r = json.load(f)
+    print(f"Rows: {r.get('n_rows', '—')} over {r.get('chunks', '—')} chunks\n")
+    print("| metric | value |")
+    print("|---|---|")
+    if "oneshot_us" in r:
+        print(f"| one-shot (concurrent) | {r['oneshot_us']/1e3:.1f} ms |")
+        print(f"| streamed, same rows | {r['stream_us']/1e3:.1f} ms |")
+    if "overlap_speedup" in r:
+        print(f"| ingest prefetch=0 | {r['overlap_prefetch0_us']/1e3:.1f} ms |")
+        print(f"| ingest prefetch=2 | {r['overlap_prefetch2_us']/1e3:.1f} ms |")
+        print(f"| overlap speedup | {r['overlap_speedup']:.2f}× |")
+    for mode in ("buffered", "stream"):
+        cell = r.get(f"sharded_{mode}")
+        if cell:
+            print(
+                f"| sharded {mode} | {cell['us']/1e3:.1f} ms, "
+                f"peak RSS {cell['peak_rss_mb']:.0f} MB, "
+                f"{cell['peak_buffered_chunks']} buffered chunks |"
+            )
+    if "sharded_stream_speedup" in r:
+        gate = "PASS" if r["sharded_stream_speedup"] >= 1.0 else "FAIL"
+        print(f"| streaming-sharded vs buffered | "
+              f"{r['sharded_stream_speedup']:.2f}× ({gate} ≥1× gate) |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
-    ap.add_argument("--section", default="both", choices=["dryrun", "roofline", "both"])
+    ap.add_argument("--section", default="both",
+                    choices=["dryrun", "roofline", "streaming", "both"])
+    ap.add_argument("--stream-json", default="BENCH_stream.json",
+                    help="bench_stream artifact for §Streaming")
     args = ap.parse_args()
     cells = load(args.dir)
     if args.section in ("dryrun", "both"):
@@ -71,6 +103,10 @@ def main():
     if args.section in ("roofline", "both"):
         print("### Roofline (single-pod 16×16, 256 chips)\n")
         roofline_table(cells)
+        print()
+    if args.section in ("streaming", "both") and os.path.exists(args.stream_json):
+        print("### Streaming ingest (bench_stream)\n")
+        streaming_table(args.stream_json)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ def main() -> None:
         bench_plan,
         bench_resize,
         bench_roofline,
+        bench_stream,
         bench_ticketer,
         bench_ticketing,
         bench_updates,
@@ -40,6 +41,8 @@ def main() -> None:
         ("table3", lambda: bench_memory.run(n=n)),
         ("hybrid", lambda: bench_hybrid.run(n=n)),
         ("plan_sweep", lambda: bench_plan.run(n=n)),
+        ("streaming", lambda: bench_stream.run(
+            n=n, json_path=os.environ.get("BENCH_STREAM_JSON"))),
         ("roofline", bench_roofline.run),
     ]
     for name, fn in suites:

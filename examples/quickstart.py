@@ -5,6 +5,11 @@ and the strategy is a single field: ``auto`` lets the planner choose from
 sample statistics (the paper's estimate → choose → run), or pin any of
 ``concurrent | partitioned | hybrid | pallas`` to sweep the design space.
 
+The second half streams: ``plan.stream(source)`` pulls chunks on demand
+(any iterable of Tables, or a ChunkSource), overlaps host staging with the
+device scan, supports idempotent mid-stream ``snapshot()``, and recovers a
+misestimated cardinality bound in-stream without replaying anything.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import time
@@ -53,6 +58,39 @@ def main():
         ng = int(conc["__num_groups__"][0])
         print(f"         concurrent: {ms_c:8.1f} ms   ({ng} groups)")
         print(f"         partitioned:{ms_p:8.1f} ms   speedup {ms_p/ms_c:.2f}x\n")
+
+    streaming_demo()
+
+
+def streaming_demo():
+    """Pull-based streaming: unbounded chunk stream, bounded state."""
+    print("Streaming GROUP BY over a 16-chunk pull-based source")
+    rng = np.random.default_rng(1)
+    chunk_rows, n_chunks = 1 << 16, 16
+
+    def source():  # any generator of Tables is a chunk source
+        for _ in range(n_chunks):
+            keys = rng.integers(0, 50_000, size=chunk_rows).astype(np.uint32)
+            vals = rng.normal(size=chunk_rows).astype(np.float32)
+            yield Table({"k": jnp.asarray(keys), "v": jnp.asarray(vals)})
+
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("count"), AggSpec("mean", "v")),
+        strategy="concurrent",
+        max_groups=1024,                     # deliberately ~50× too small …
+        saturation=SaturationPolicy.GROW,    # … recovered in-stream, no replay
+        raw_keys=True,
+    )
+    handle = plan.stream(source())           # nothing consumed yet
+    handle.pump(4)
+    snap = handle.snapshot()                 # idempotent mid-stream read
+    print(f"  after 4 chunks:  {int(snap['__num_groups__'][0]):>6} groups "
+          f"({handle.rows_consumed:,} rows, "
+          f"{handle.peak_buffered_chunks} chunks retained)")
+    out = handle.result()                    # drain + finalize
+    print(f"  after {n_chunks} chunks: {int(out['__num_groups__'][0]):>6} groups "
+          f"({handle.rows_consumed:,} rows, "
+          f"{handle.peak_buffered_chunks} chunks retained)")
 
 
 if __name__ == "__main__":

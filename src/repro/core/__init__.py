@@ -15,11 +15,17 @@ signature-compatible legacy adapters that lower to that plan API:
   table_capacity          — THE probe-table capacity rule (hashing.py)
 """
 from repro.core.aggregation import GroupByResult, concurrent_groupby, groupby_oracle
-from repro.core.adaptive import Plan, WorkloadStats, choose_plan, sample_stats
+from repro.core.adaptive import (
+    Plan,
+    RunningStats,
+    WorkloadStats,
+    choose_plan,
+    sample_stats,
+)
 from repro.core.hashing import EMPTY_KEY, table_capacity
 from repro.core.hybrid import detect_heavy_hitters, hybrid_groupby
 from repro.core.partitioned import partitioned_groupby
-from repro.core.resize import maybe_resize, migrate
+from repro.core.resize import grow_bound, maybe_resize, migrate
 from repro.core.ticketing import (
     TicketTable,
     direct_ticketing,
@@ -33,6 +39,7 @@ from repro.core.updates import (
     AggState,
     finalize,
     get_update_fn,
+    grow_agg_state,
     init_acc,
     init_agg_state,
     onehot_update,
@@ -47,6 +54,7 @@ __all__ = [
     "concurrent_groupby",
     "groupby_oracle",
     "Plan",
+    "RunningStats",
     "WorkloadStats",
     "choose_plan",
     "sample_stats",
@@ -61,12 +69,14 @@ __all__ = [
     "lookup",
     "make_table",
     "sort_ticketing",
+    "grow_bound",
     "maybe_resize",
     "migrate",
     "UPDATE_FNS",
     "AggState",
     "finalize",
     "get_update_fn",
+    "grow_agg_state",
     "init_acc",
     "init_agg_state",
     "update_agg_state",

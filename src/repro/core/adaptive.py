@@ -64,6 +64,94 @@ def choose_plan(stats: WorkloadStats) -> Plan:
     return Plan("hash", "scatter", "dense_psum", cap)
 
 
+class RunningStats:
+    """Mergeable workload statistics carried ACROSS stream chunks.
+
+    ``sample_stats`` sees one chunk; a long stream can drift (the heavy-
+    hitter mass of a Zipf source only emerges over many chunks, and the
+    distinct count grows without bound on near-unique streams).  This
+    keeps a tiny host-side sketch updated from a prefix sample of every
+    chunk:
+
+      * a Misra–Gries counter set (``num_counters`` slots) for heavy-hitter
+        mass — deletions decrement all counters, so a surviving counter's
+        frequency is a lower bound on the key's true sampled frequency;
+      * a bounded union of sampled distinct keys for the cardinality
+        estimate (same u-anchored birthday estimator as ``sample_stats``).
+
+    ``strategy="auto"`` executors feed every chunk through ``update`` and
+    re-plan when the observed stats cross a planner threshold (the
+    hash→hybrid escalation), and the observed distinct count feeds back
+    into capacity bounds.
+    """
+
+    def __init__(self, num_counters: int = 16, sample: int = 4096,
+                 distinct_cap: int = 1 << 16, domain: int | None = None):
+        self.num_counters = num_counters
+        self.sample = sample
+        self.distinct_cap = distinct_cap
+        self.domain = domain
+        self.n_rows = 0
+        self.sampled = 0
+        self._counters: dict[int, int] = {}
+        self._distinct: set[int] = set()
+        self._distinct_saturated = False
+
+    def update(self, keys: jnp.ndarray) -> "WorkloadStats":
+        """Fold one chunk's prefix sample into the sketch; returns the
+        refreshed cumulative :class:`WorkloadStats`."""
+        import numpy as np
+
+        flat = keys.reshape(-1)
+        self.n_rows += int(flat.shape[0])
+        s = min(self.sample, flat.shape[0])
+        ks = np.asarray(jax.device_get(flat[:s]))
+        ks = ks[ks != np.uint32(0xFFFFFFFF)]
+        self.sampled += int(ks.size)
+        if ks.size:
+            uniq, counts = np.unique(ks, return_counts=True)
+            for k, c in zip(uniq.tolist(), counts.tolist()):
+                if k in self._counters:
+                    self._counters[k] += c
+                elif len(self._counters) < self.num_counters:
+                    self._counters[k] = c
+                else:
+                    # Weighted Misra–Gries decrement round: pay the smaller
+                    # of the newcomer's weight and the lightest counter,
+                    # evict the emptied counters, and ADMIT the newcomer
+                    # with its residual weight — a heavy hitter must be
+                    # able to displace incumbents no matter where its key
+                    # id falls in the sample's sorted order.
+                    d = min(c, min(self._counters.values()))
+                    self._counters = {
+                        key: v - d for key, v in self._counters.items() if v > d
+                    }
+                    if c > d and len(self._counters) < self.num_counters:
+                        self._counters[k] = c - d
+            if not self._distinct_saturated:
+                self._distinct.update(uniq.tolist())
+                if len(self._distinct) >= self.distinct_cap:
+                    self._distinct_saturated = True
+        return self.stats
+
+    @property
+    def heavy_keys(self):
+        """Current heavy-hitter candidates, heaviest first."""
+        return sorted(self._counters, key=self._counters.get, reverse=True)
+
+    @property
+    def stats(self) -> WorkloadStats:
+        u = len(self._distinct)
+        if self.sampled == 0:
+            return WorkloadStats(self.n_rows, 1, 0.0, self.domain)
+        top = max(self._counters.values(), default=0) / self.sampled
+        if self._distinct_saturated or u > 0.5 * self.sampled:
+            est = int(min(max(u * self.n_rows / self.sampled, u), self.n_rows))
+        else:
+            est = u
+        return WorkloadStats(self.n_rows, max(est, 1), top, self.domain)
+
+
 def sample_stats(keys: jnp.ndarray, sample: int = 4096, domain: int | None = None) -> WorkloadStats:
     """Estimate cardinality & skew from a prefix sample (engine fallback when
     no optimizer estimate exists). Uses the birthday-style estimator

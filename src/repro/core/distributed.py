@@ -33,17 +33,293 @@ made literal.
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import resize
 from repro.core import ticketing as tk
 from repro.core import updates as up
 from repro.core.aggregation import GroupByResult
 from repro.core.hashing import EMPTY_KEY, slot_hash, table_capacity
 from repro.core.partitioned import make_preagg, preagg_morsel
 from repro.parallel.sharding import shard_map
+
+
+# ---------------------------------------------------------------------------
+# Streaming sharded consume: per-device state carried ACROSS chunks.
+#
+# The buffered PR-2 path re-ran the whole mesh pipeline over every row at
+# finalize — O(total rows) host memory on a stream.  The streaming contract
+# below is the paper's thread-local method made incremental: each device
+# owns a local ticket table + dense partial-aggregate vector (the "carry"),
+# every chunk is shard_map'ed over the mesh and folded into that carry, and
+# the cross-device merge (dense psum union or all_to_all exchange) runs ONCE
+# at finalize over state that is O(devices × capacity), independent of how
+# many chunks streamed through.
+
+
+class ShardedCarry(NamedTuple):
+    """Per-device streaming aggregation state (leading axis = mesh devices).
+
+    ``keys/tickets`` are each device's probe table, ``kbt`` its ticket-
+    ordered unique-key list (the only thing the merge ever communicates —
+    the paper's indirection payoff), ``acc`` its dense ticket-indexed
+    partial aggregates.  ``ovf`` is sticky per device: local tickets past
+    the local bound, or rows dropped by a saturated probe table.
+    """
+
+    keys: jnp.ndarray     # (ndev, capacity) uint32
+    tickets: jnp.ndarray  # (ndev, capacity) int32
+    kbt: jnp.ndarray      # (ndev, max_local) uint32
+    count: jnp.ndarray    # (ndev,) int32
+    ovf: jnp.ndarray      # (ndev,) bool
+    acc: jnp.ndarray      # (ndev, max_local) float32
+
+    @property
+    def capacity(self) -> int:
+        return self.keys.shape[1]
+
+    @property
+    def max_local(self) -> int:
+        return self.kbt.shape[1]
+
+
+def make_sharded_carry(ndev: int, max_local: int, kind: str,
+                       capacity: int | None = None) -> ShardedCarry:
+    cap = capacity or table_capacity(max_local)
+    return ShardedCarry(
+        keys=jnp.full((ndev, cap), EMPTY_KEY, jnp.uint32),
+        tickets=jnp.zeros((ndev, cap), jnp.int32),
+        kbt=jnp.full((ndev, max_local), EMPTY_KEY, jnp.uint32),
+        count=jnp.zeros((ndev,), jnp.int32),
+        ovf=jnp.zeros((ndev,), jnp.bool_),
+        acc=up.init_acc(max_local, kind)[None].repeat(ndev, axis=0),
+    )
+
+
+def make_sharded_consume_step(mesh, axis: str, *, kind: str, update: str,
+                              load_factor: float, checked: bool):
+    """Build the jitted per-chunk consume step: shard_map over the mesh,
+    each device folding its (num_morsels, morsel_rows) slice of the chunk
+    into its carried table + accumulator with an inner ``lax.scan`` — the
+    single-core scan-compiled pipeline replicated per device.
+
+    ``checked=True`` runs the engine's in-scan pause protocol (§4.4 at mesh
+    scale) — the SAME morsel body as the single-device consume scan
+    (``engine.groupby.make_pause_scan_body``), so the pause-commits-nothing
+    invariant lives in one place: before each morsel a device pauses when
+    its load factor or its bound headroom is crossed, and the returned
+    per-device halt flags let the host migrate/widen every device's table
+    and resume each device at ITS OWN paused morsel (``start`` is a
+    per-device vector — devices that finished replay nothing).
+
+    ``checked=False`` is the zero-sync regime: no pauses, rows past a
+    saturated table or the local bound drop with only the sticky per-device
+    ``ovf`` flag recording the loss (read once at finalize by the
+    raise policy, never by unchecked).
+    """
+    update_fn = up.get_update_fn(update)
+
+    def local(keys, tickets, kbt, count, ovf, acc, km, vm, start):
+        from repro.engine.groupby import make_pause_scan_body
+
+        table = tk.TicketTable(
+            keys[0], tickets[0], kbt[0], count[0], ovf[0]
+        )
+        lacc = acc[0]
+        km0, vm0 = km[0], vm[0]
+        st = start[0]
+        capacity = table.capacity
+        threshold = int(load_factor * capacity)
+        bound_slack = table.max_groups - km0.shape[1]
+        idxs = jnp.arange(km0.shape[0], dtype=jnp.int32)
+
+        if not checked:
+            def body(carry, xs):
+                table, lacc = carry
+                k, v = xs
+                tks, table = tk.get_or_insert(table, k)
+                dropped = jnp.any((tks < 0) & (k != jnp.uint32(EMPTY_KEY)))
+                table = table._replace(overflowed=table.overflowed | dropped)
+                lacc = update_fn(lacc, tks, v, kind=kind)
+                return (table, lacc), jnp.zeros((), jnp.bool_)
+
+            (table, lacc), halts = jax.lax.scan(body, (table, lacc), (km0, vm0))
+        else:
+            body = make_pause_scan_body(
+                st, threshold, bound_slack,
+                lambda lacc, tks, v: update_fn(lacc, tks, v, kind=kind),
+            )
+            (table, lacc, _), halts = jax.lax.scan(
+                body, (table, lacc, jnp.zeros((), jnp.bool_)), (idxs, km0, vm0)
+            )
+        return (
+            table.keys[None], table.tickets[None], table.key_by_ticket[None],
+            table.count[None], table.overflowed[None], lacc[None], halts[None],
+        )
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(axis, None), P(axis, None), P(axis, None), P(axis), P(axis),
+            P(axis, None), P(axis, None, None), P(axis, None, None), P(axis),
+        ),
+        out_specs=(
+            P(axis, None), P(axis, None), P(axis, None), P(axis), P(axis),
+            P(axis, None), P(axis, None),
+        ),
+        check_vma=False,
+    )
+    jitted = jax.jit(fn)
+
+    def step(carry: ShardedCarry, km, vm, start):
+        keys, tickets, kbt, count, ovf, acc, halts = jitted(
+            carry.keys, carry.tickets, carry.kbt, carry.count, carry.ovf,
+            carry.acc, km, vm, start,
+        )
+        return ShardedCarry(keys, tickets, kbt, count, ovf, acc), halts
+
+    return step
+
+
+def grow_sharded_carry(carry: ShardedCarry, new_max_local: int,
+                       new_capacity: int, kind: str) -> ShardedCarry:
+    """Mesh analogue of the operator's pause-time growth: widen every
+    device's bound (pad ``kbt`` + accumulator — tickets are stable) and/or
+    migrate every device's probe table (vmapped contention-less §4.4
+    migration).  Uniform across devices so shapes stay static."""
+    kbt, acc = carry.kbt, carry.acc
+    if new_max_local > carry.max_local:
+        ndev, pad = kbt.shape[0], new_max_local - carry.max_local
+        kbt = jnp.concatenate(
+            [kbt, jnp.full((ndev, pad), EMPTY_KEY, jnp.uint32)], axis=1
+        )
+        acc = jnp.concatenate(
+            [acc, jnp.full((ndev, pad), up.neutral(kind, acc.dtype), acc.dtype)],
+            axis=1,
+        )
+    keys, tickets = carry.keys, carry.tickets
+    if new_capacity > carry.capacity:
+        migrated = jax.vmap(
+            lambda k, t, kb, c, o: resize.migrate(
+                tk.TicketTable(k, t, kb, c, o), new_capacity
+            )
+        )(keys, tickets, kbt, carry.count, carry.ovf)
+        keys, tickets, kbt = migrated.keys, migrated.tickets, migrated.key_by_ticket
+    return ShardedCarry(keys, tickets, kbt, carry.count, carry.ovf, acc)
+
+
+def sharded_psum_merge(mesh, axis: str, carry: ShardedCarry, *, kind: str,
+                       max_groups: int):
+    """Dense-psum union merge of a streamed :class:`ShardedCarry` — steps
+    2–5 of the fully concurrent mesh protocol (all-gather unique keys,
+    deterministic union replay, ticket translation, one dense psum), run
+    over O(devices × max_local) carried state instead of over rows.
+
+    Pure function of the carry, so mid-stream snapshots are free: the
+    caller can merge, read, and keep consuming into the same carry.
+    Returns ``(GroupByResult, local_ovf, union_ovf)`` — the sticky
+    per-device loss flags (psum'd) and the union-table overflow, for the
+    saturation policy to inspect.
+    """
+    cap_global = table_capacity(max_groups)
+    max_local = carry.max_local
+    merge_kind = {"count": "sum", "sum": "sum", "min": "min", "max": "max"}[kind]
+
+    def local(kbt, lacc, ovf):
+        local_keys = kbt[0]
+        all_keys = jax.lax.all_gather(local_keys, axis, tiled=True)
+        gtickets, gtable = tk.get_or_insert(
+            tk.make_table(cap_global, max_groups=max_groups), all_keys
+        )
+        rank = jax.lax.axis_index(axis)
+        mine = jax.lax.dynamic_slice_in_dim(
+            gtickets, rank * max_local, max_local
+        )
+        gacc = up.init_acc(max_groups, kind)
+        gacc = up.scatter_update(gacc, mine, lacc[0], kind=merge_kind)
+        if merge_kind == "sum":
+            gacc = jax.lax.psum(gacc, axis)
+        elif merge_kind == "min":
+            gacc = -jax.lax.pmax(-gacc, axis)
+        else:
+            gacc = jax.lax.pmax(gacc, axis)
+        lovf = jax.lax.psum(ovf[0].astype(jnp.int32), axis)
+        govf = gtable.overflowed.astype(jnp.int32)
+        return gacc, gtable.key_by_ticket, gtable.count, lovf, govf
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis)),
+        out_specs=(P(), P(), P(), P(), P()),
+        check_vma=False,
+    )
+    gacc, key_by_ticket, count, lovf, govf = fn(carry.kbt, carry.acc, carry.ovf)
+    return GroupByResult(key_by_ticket, up.finalize(kind, gacc), count), lovf, govf
+
+
+def sharded_exchange_merge(mesh, axis: str, carry: ShardedCarry, *, kind: str,
+                           max_groups: int, partition_capacity: int | None = None):
+    """All_to_all exchange merge of a streamed :class:`ShardedCarry` — the
+    Leis baseline's exchange run over per-device LOCAL AGGREGATES (each
+    device's carried ticket table is its pre-aggregation, complete and
+    spill-free, bounded by max_local) instead of over buffered raw rows.
+
+    Returns the partitioned strategy's native per-device layout
+    ``(keys_p, vals_p, counts_p, overflow_p)`` plus the psum'd sticky local
+    loss flag.  ``overflow_p`` counts partition-bucket drops (static-shape
+    exchange); callers grow ``partition_capacity`` and re-run — cheap,
+    since the input is carried state, not rows.
+    """
+    ndev = mesh.shape[axis]
+    max_local = carry.max_local
+    merge_kind = {"count": "sum", "sum": "sum", "min": "min", "max": "max"}[kind]
+    cap = partition_capacity or max(2 * max_local // ndev, 16)
+
+    def local(kbt, lacc, ovf):
+        allk = kbt[0]
+        allv = lacc[0]
+        pid = (slot_hash(allk, ndev, seed=7)).astype(jnp.int32)
+        pid = jnp.where(allk == EMPTY_KEY, ndev, pid)
+        order = jnp.argsort(pid, stable=True)
+        pk, pv, pp = (jnp.take(x, order) for x in (allk, allv, pid))
+        pos = jnp.arange(pk.shape[0]) - jnp.searchsorted(pp, pp, side="left")
+        overflow = jnp.sum((pos >= cap) & (pp < ndev))
+        dest = jnp.where((pos < cap) & (pp < ndev), pp * cap + pos, ndev * cap)
+        bk = jnp.full((ndev * cap + 1,), EMPTY_KEY, jnp.uint32).at[dest].set(pk)[:-1]
+        bv = jnp.full(
+            (ndev * cap + 1,), up.neutral(merge_kind), jnp.float32
+        ).at[dest].set(pv)[:-1]
+        bk = bk.reshape(ndev, cap)
+        bv = bv.reshape(ndev, cap)
+        xk = jax.lax.all_to_all(bk, axis, split_axis=0, concat_axis=0, tiled=False)
+        xv = jax.lax.all_to_all(bv, axis, split_axis=0, concat_axis=0, tiled=False)
+        xk = xk.reshape(-1)
+        xv = xv.reshape(-1)
+        tickets, key_by_ticket, cnt = tk.sort_ticketing(xk)
+        acc = up.init_acc(max_groups, merge_kind)
+        acc = up.sort_segment_update(acc, tickets, xv, kind=merge_kind)
+        lovf = jax.lax.psum(ovf[0].astype(jnp.int32), axis)
+        return (
+            key_by_ticket[:max_groups],
+            up.finalize(kind, acc),
+            cnt.reshape(1),
+            overflow.reshape(1).astype(jnp.int32),
+            lovf,
+        )
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis), P()),
+        check_vma=False,
+    )
+    keys_p, vals_p, counts_p, overflow_p, lovf = fn(carry.kbt, carry.acc, carry.ovf)
+    return keys_p, vals_p, counts_p, overflow_p, lovf
 
 
 def concurrent_groupby_sharded(

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ticketing as tk
-from repro.core.hashing import EMPTY_KEY, slot_hash
+from repro.core.hashing import EMPTY_KEY, slot_hash, table_capacity
 
 
 @functools.partial(jax.jit, static_argnames=("new_capacity",))
@@ -74,6 +74,38 @@ def migrate(table: tk.TicketTable, new_capacity: int) -> tk.TicketTable:
     # key_by_ticket length IS the max_groups contract — growing the probe
     # table must not widen it, or the overflow check would silently relax.
     return tk.TicketTable(nk, nt, table.key_by_ticket, table.count, table.overflowed)
+
+
+def grow_bound(
+    table: tk.TicketTable, new_max_groups: int, load_factor: float = 0.5
+) -> tk.TicketTable:
+    """Widen the table's ``max_groups`` contract (the ``key_by_ticket``
+    length) to ``new_max_groups``, migrating the probe table alongside if
+    the one capacity rule demands more slots for the new bound.
+
+    This is the table half of the engine's *in-stream* bound growth: when
+    the consume scan pauses on its bound-headroom flag (``grow_bound``
+    pipelines pause BEFORE a morsel could overflow, so nothing was dropped),
+    the host widens ``key_by_ticket`` here, pads the ticket-indexed
+    accumulators (``updates.grow_agg_state``) and resumes the same scan at
+    the paused morsel — §4.4 pause/migrate/resume applied to the cardinality
+    bound instead of the probe capacity, with no chunk replay and no
+    retained chunks.
+    """
+    assert new_max_groups >= table.max_groups, (new_max_groups, table.max_groups)
+    if new_max_groups > table.max_groups:
+        pad = jnp.full(
+            (new_max_groups - table.max_groups,), EMPTY_KEY, jnp.uint32
+        )
+        table = tk.TicketTable(
+            table.keys, table.tickets,
+            jnp.concatenate([table.key_by_ticket, pad]),
+            table.count, table.overflowed,
+        )
+    cap_needed = table_capacity(new_max_groups, load_factor)
+    if cap_needed > table.capacity:
+        table = migrate(table, cap_needed)
+    return table
 
 
 def maybe_resize(table: tk.TicketTable, load_factor: float = 0.5) -> tk.TicketTable:

@@ -102,6 +102,25 @@ def init_agg_state(specs: Sequence[tuple], num_groups: int, dtype=jnp.float32) -
     return AggState(specs, tuple(init_acc(num_groups, k, dtype) for _, k in specs))
 
 
+def grow_agg_state(state: AggState, num_groups: int) -> AggState:
+    """Widen every accumulator to ``num_groups`` slots, padding with the
+    kind's neutral element.  Tickets are stable under growth (they are dense
+    insertion ranks), so existing slots keep their meaning — this is the
+    accumulator half of the engine's in-stream bound growth
+    (``resize.grow_bound`` is the table half)."""
+    assert num_groups >= state.num_groups, (num_groups, state.num_groups)
+    if num_groups == state.num_groups:
+        return state
+    accs = []
+    for (_, kind), acc in zip(state.specs, state.accs):
+        pad = jnp.full(
+            (num_groups - acc.shape[0], *acc.shape[1:]),
+            neutral(kind, acc.dtype), acc.dtype,
+        )
+        accs.append(jnp.concatenate([acc, pad]))
+    return AggState(state.specs, tuple(accs))
+
+
 def update_agg_state(
     state: AggState,
     tickets: jnp.ndarray,

@@ -8,19 +8,71 @@ concurrent model is built for: partitioned aggregation would have to
 re-exchange per batch).  These stats drive mixture re-weighting decisions
 and are exported to the metrics stream.
 
+This module also defines the engine's pull-based streaming source contract,
+:class:`ChunkSource`: anything with a ``chunks() -> Iterator[Table]``
+method feeds ``GroupByPlan.stream`` / ``collect`` directly.  Adapters here
+cover the common shapes — an iterable of tables (:class:`IterableSource`),
+raw key/value arrays morselized into chunks (:class:`ArraySource`) — and
+:class:`SyntheticLM` itself satisfies the protocol (``chunks()`` yields
+token-key tables, one per generated batch).
+
 Checkpointable: the iterator state is (epoch, position, rng), saved with
 the model checkpoint so restarts replay the exact stream.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator
+from typing import Iterator, Mapping, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
+
+
+@runtime_checkable
+class ChunkSource(Protocol):
+    """The streaming source contract: a pull-based producer of ``Table``
+    chunks.  The consumer (``GroupByPlan.stream``) pulls on demand, so
+    sources may be unbounded — aggregation state, not source length,
+    bounds memory on every streaming strategy."""
+
+    def chunks(self) -> Iterator["Table"]: ...  # pragma: no cover - protocol
+
+
+@dataclass
+class IterableSource:
+    """Adapt any iterable/iterator of ``Table`` chunks to
+    :class:`ChunkSource`.  An iterator is consumed once; pass a list/tuple
+    (or a generator factory via ``IterableSource(lambda: gen())`` — any
+    zero-arg callable returning an iterable works) for re-streamable
+    sources."""
+
+    tables: object
+
+    def chunks(self) -> Iterator["Table"]:
+        src = self.tables() if callable(self.tables) else self.tables
+        yield from src
+
+
+@dataclass
+class ArraySource:
+    """Adapt raw columnar arrays to :class:`ChunkSource`: the rows are cut
+    into ``chunk_rows``-sized ``Table`` chunks (the last one ragged) —
+    morselized arrays as a stream, the shape every legacy array-based
+    entry point feeds."""
+
+    columns: Mapping[str, jnp.ndarray]
+    chunk_rows: int = 1 << 16
+
+    def chunks(self) -> Iterator["Table"]:
+        from repro.engine.columns import Table
+
+        n = next(iter(self.columns.values())).shape[0]
+        for start in range(0, n, self.chunk_rows):
+            end = min(start + self.chunk_rows, n)
+            yield Table({k: v[start:end] for k, v in self.columns.items()})
 
 
 @dataclass
@@ -70,6 +122,27 @@ class SyntheticLM:
         n = int(out["__num_groups__"][0])
         return np.asarray(out["key"])[:n], np.asarray(out["count(*)"])[:n]
 
+    def _token_table(self, toks: np.ndarray):
+        """One batch's token ids as a bounded-key-space ``Table`` chunk."""
+        from repro.engine.columns import Table
+
+        keys = jnp.asarray(toks[:, :-1]).reshape(-1).astype(jnp.uint32)
+        # bound the tracked key space: heavy hitters dominate Zipf
+        keys = jnp.where(keys < self.stat_groups // 2, keys, jnp.uint32(0xFFFFFFFF))
+        return Table({"token": keys})
+
+    def chunks(self) -> Iterator[dict]:
+        """:class:`ChunkSource` adapter: an unbounded stream of token-key
+        tables, one per generated batch.  Pulling a chunk ADVANCES the
+        synthetic stream (same ``DataState`` as ``__iter__``), so use it to
+        drive a standalone streaming aggregation (``plan.stream(lm)``), not
+        interleaved with training iteration."""
+        while True:
+            rng = np.random.default_rng(self.state.seed + self.state.step)
+            toks = self._sample(rng)
+            self.state.step += 1
+            yield self._token_table(toks)
+
     def __iter__(self) -> Iterator[dict]:
         while True:
             rng = np.random.default_rng(self.state.seed + self.state.step)
@@ -90,10 +163,7 @@ class SyntheticLM:
                     rngk, (self.batch, self.seq, self.cfg.d_model)
                 )
             if self.track_stats:
-                from repro.engine.columns import Table
-
-                keys = batch["tokens"].reshape(-1).astype(jnp.uint32)
-                # bound the tracked key space: heavy hitters dominate Zipf
-                keys = jnp.where(keys < self.stat_groups // 2, keys, jnp.uint32(0xFFFFFFFF))
-                self._stats.consume(Table({"token": keys}))
+                # unchecked scan → async dispatch; the device folds this
+                # batch's counts while the host samples the next one
+                self._stats.consume(self._token_table(toks))
             yield batch

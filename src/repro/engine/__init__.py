@@ -1,5 +1,5 @@
 from repro.engine.columns import Table, combine_keys
-from repro.engine.executors import make_executor, resolve_plan
+from repro.engine.executors import make_executor, resolve_plan, resolve_plan_stats
 from repro.engine.groupby import (
     AggSpec,
     GroupByOperator,
@@ -12,7 +12,9 @@ from repro.engine.plan_api import (
     ExecutionPolicy,
     GroupByPlan,
     SaturationPolicy,
+    StreamHandle,
     execute,
+    iter_chunks,
 )
 from repro.engine.plans import Aggregate, Filter, Scan
 
@@ -33,6 +35,9 @@ __all__ = [
     "GroupByPlan",
     "SaturationPolicy",
     "execute",
+    "iter_chunks",
     "make_executor",
     "resolve_plan",
+    "resolve_plan_stats",
+    "StreamHandle",
 ]

@@ -1,32 +1,49 @@
 """Executors: the single seam every GROUP BY strategy lowers through.
 
 ``make_executor(plan)`` turns a declarative :class:`GroupByPlan` into an
-object implementing the morsel-driven operator protocol
+object implementing the morsel-driven STREAMING operator protocol
 
     open() → consume(chunk: Table)* → finalize() → Table
 
-which is exactly the contract of the PR-1 scan-compiled pipeline breaker
-(engine/groupby.py).  The strategies:
+plus the pull-based extensions the plan API's :class:`StreamHandle` drives:
+
+  * ``consume_async(chunk) → token`` / ``poll(token)`` — the double-buffered
+    ingest seam: ``consume_async`` dispatches the chunk's device work and
+    returns immediately, so the host stages (pulls + morselizes) the next
+    chunk while the device scan is in flight; ``poll`` later resolves the
+    chunk's control signals (pause flags, overflow) in dispatch order.
+    ``consume`` ≡ ``poll(consume_async(chunk))``.
+  * ``finalize`` is an idempotent read on every strategy — a mid-stream
+    ``snapshot()`` materializes the groups seen so far and consumption can
+    continue afterwards.
+
+The strategies:
 
   * ``concurrent`` — the scan-compiled morsel pipeline (hash ticketing);
+    streams natively, retains no chunks.  ``saturation="grow"`` rides the
+    operator's in-stream pause→widen→resume bound growth (no replay).
     ``execution.ticketing="sort"|"direct"`` selects the sort-based /
-    perfect-hash one-shot variants.  ``execution.use_kernel`` swaps the
-    update stage for the Pallas segment-update kernel inside the same scan.
-  * ``hybrid``     — heavy-hitter register path + concurrent tail (§6
-    future work).  The register reduction is chunked over the morsel axis,
-    so its memory is O(R·morsel_rows), never O(R·N).
-  * ``pallas``     — the kernel-backed ticket→update pipeline (VMEM table).
-  * ``partitioned``— the Leis-style preagg/exchange/final baseline.
-  * ``sharded``    — mesh execution; ``execution.shard_merge`` picks the
-    dense-psum (thread-local analogue) or all_to_all (partitioned) merge.
+    perfect-hash variants — the only genuinely ONE-SHOT executors left
+    (sorting is a pipeline breaker over the full input), documented as such.
+  * ``hybrid``     — heavy-hitter register path + concurrent tail; streams
+    (registers fold per chunk, the tail rides the scan pipeline).
+  * ``pallas``     — kernel-backed ticket→update per chunk, merged into a
+    carried ticket table (state O(max_groups), no buffered chunks).
+  * ``partitioned``— per-chunk Leis-style preagg/exchange/final, the chunk
+    partial merged into a carried table at consume (incremental).
+  * ``sharded``    — mesh execution with per-device state carried across
+    chunks (``core.distributed.ShardedCarry``) and ONE merge at finalize:
+    state is O(devices × capacity), independent of the stream length.
+    ``execution.sharded_ingest="buffered"`` keeps the PR-2 buffer-everything
+    path for A/B benchmarking.
 
 Saturation is enforced here, uniformly: every executor implements
 ``raise`` / ``grow`` / ``unchecked`` (plan_api.SaturationPolicy).  ``grow``
-is the engine's migrate-and-replay recovery generalized — executors retain
-the consumed chunks, and an overflowing finalize re-runs with a grown
-bound (bounded by the consumed row count, so it terminates).  This is what
-makes a *misestimated* cardinality a policy decision instead of silent
-truncation on six of the seven legacy entry points.
+no longer replays retained chunks — the streaming executors either widen
+their bound in-stream BEFORE anything is dropped (concurrent, hybrid,
+sharded: §4.4 pause/migrate/resume applied to the cardinality bound) or
+recover per chunk and grow their carried merge state (pallas, partitioned).
+Only the one-shot sort/direct executors still gather the stream.
 """
 from __future__ import annotations
 
@@ -35,6 +52,7 @@ from dataclasses import replace
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import adaptive
 from repro.core import ticketing as tk
@@ -47,7 +65,6 @@ from repro.engine.groupby import (
     build_result_table,
     expand_agg_specs,
 )
-from repro.engine.morsels import morselize_chunk
 from repro.engine.plan_api import (
     GroupByPlan,
     SaturationPolicy,
@@ -58,7 +75,9 @@ from repro.engine.plan_api import (
 def make_executor(plan: GroupByPlan):
     """Lower a plan to its executor.  ``strategy="auto"`` (or an unset
     ``max_groups``) defers to a resolving wrapper that samples the first
-    chunk's keys and re-dispatches — the paper's estimate → choose → run."""
+    chunk's keys and re-dispatches — the paper's estimate → choose → run —
+    and keeps running statistics across the stream for mid-stream
+    re-planning."""
     if plan.saturation is None:
         # THE saturation default: an estimated bound recovers (a sample
         # cannot see a long tail); an explicit bound is a caller contract.
@@ -79,12 +98,32 @@ def make_executor(plan: GroupByPlan):
     if plan.strategy == "partitioned":
         return _PartitionedExecutor(plan)
     if plan.strategy == "sharded":
+        if plan.execution.sharded_ingest == "buffered":
+            return _BufferedShardedExecutor(plan)
         return _ShardedExecutor(plan)
     raise ValueError(f"unknown strategy {plan.strategy!r}")
 
 
 # ---------------------------------------------------------------------------
 # shared helpers
+
+
+class _ExecutorBase:
+    """Default streaming protocol: executors without their own async seam
+    consume synchronously (``consume_async`` degenerates), and executors
+    that retain no chunks report a zero buffer high-water mark."""
+
+    peak_buffered_chunks = 0  # chunks retained beyond the in-flight window
+
+    def open(self) -> None:
+        pass
+
+    def consume_async(self, chunk: Table):
+        self.consume(chunk)
+        return None
+
+    def poll(self, token) -> None:
+        pass
 
 
 def _chunk_keys_values(plan: GroupByPlan, chunk: Table):
@@ -97,8 +136,6 @@ def _chunk_keys_values(plan: GroupByPlan, chunk: Table):
 
 def _concat(parts):
     return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-
-
 
 
 def _next_bound(max_groups: int, rows: int, issued: int | None = None) -> int:
@@ -128,17 +165,18 @@ def _single_agg(plan: GroupByPlan, strategy: str):
     return plan.aggs[0]
 
 
+_MERGE_KIND = {"count": "sum", "sum": "sum", "min": "min", "max": "max"}
+
+
 # ---------------------------------------------------------------------------
-# auto resolution (estimate → choose → run)
+# auto resolution (estimate → choose → run → re-plan)
 
 
-def resolve_plan(plan: GroupByPlan, keys: jnp.ndarray) -> GroupByPlan:
-    """Bind ``strategy="auto"`` / ``max_groups=None`` from sample statistics
-    (core/adaptive.py — the paper's Table 1 policy, plus the hybrid route
-    for its worst corner: high cardinality under heavy hitters)."""
-    # a caller-declared bounded key domain (e.g. expert ids) reaches the
-    # planner's direct-ticketing rule through ExecutionPolicy.key_domain
-    stats = adaptive.sample_stats(keys, domain=plan.execution.key_domain)
+def resolve_plan_stats(plan: GroupByPlan, stats: adaptive.WorkloadStats) -> GroupByPlan:
+    """Bind ``strategy="auto"`` / ``max_groups=None`` from workload
+    statistics (core/adaptive.py — the paper's Table 1 policy, plus the
+    hybrid route for its worst corner: high cardinality under heavy
+    hitters)."""
     max_groups = plan.max_groups
     if max_groups is None:
         # 2× headroom over the estimate, never above the row count, never 0.
@@ -167,22 +205,93 @@ def resolve_plan(plan: GroupByPlan, keys: jnp.ndarray) -> GroupByPlan:
     return replace(plan, strategy=strategy, max_groups=max_groups, execution=execution)
 
 
-class _ResolvingExecutor:
-    """Defers strategy/bound resolution to the first consumed chunk."""
+def resolve_plan(plan: GroupByPlan, keys: jnp.ndarray) -> GroupByPlan:
+    """One-shot resolution from a key sample (kept for library callers; the
+    streaming resolver below carries :class:`adaptive.RunningStats` across
+    chunks instead of sampling once)."""
+    # a caller-declared bounded key domain (e.g. expert ids) reaches the
+    # planner's direct-ticketing rule through ExecutionPolicy.key_domain
+    stats = adaptive.sample_stats(keys, domain=plan.execution.key_domain)
+    return resolve_plan_stats(plan, stats)
+
+
+class _ResolvingExecutor(_ExecutorBase):
+    """Defers strategy/bound resolution to the first consumed chunk, then
+    carries :class:`adaptive.RunningStats` across the stream and RE-PLANS
+    mid-stream: a hash-ticketed concurrent pipeline escalates to hybrid
+    when the observed heavy-hitter mass crosses the planner threshold (the
+    operator — table, accumulators, grown bound — is adopted in place, so
+    nothing replays).  Observed cardinality feeds capacity bounds through
+    the operator's in-stream bound growth.
+
+    The pre-resolution chunk is handed to the resolved executor through the
+    same ``consume_async`` seam the stream uses, so ``auto`` inherits
+    ingest overlap from its very first chunk."""
+
+    SAMPLE_ROWS = 4096
 
     def __init__(self, plan: GroupByPlan):
         self._plan = plan
         self._inner = None
+        self._resolved = None
+        self._stats = adaptive.RunningStats(domain=plan.execution.key_domain)
+        self._escalated = False
 
-    def open(self) -> None:
-        pass
+    @property
+    def peak_buffered_chunks(self) -> int:
+        return self._inner.peak_buffered_chunks if self._inner else 0
+
+    def _sample_keys(self, chunk: Table) -> jnp.ndarray:
+        head = Table({k: v[: self.SAMPLE_ROWS] for k, v in chunk.columns.items()})
+        keys, _ = chunk_key_column(head, self._plan.keys, self._plan.raw_keys)
+        return keys
+
+    def _observe(self, chunk: Table) -> None:
+        stats = self._stats.update(self._sample_keys(chunk))
+        if self._inner is None:
+            self._resolved = resolve_plan_stats(self._plan, stats)
+            self._inner = make_executor(self._resolved)
+            self._inner.open()
+        else:
+            self._maybe_replan(stats)
+
+    def _maybe_replan(self, stats: adaptive.WorkloadStats) -> None:
+        """hash→hybrid escalation on long streams: the first-chunk sample
+        missed heavy-hitter mass that the running sketch has now observed.
+        Only under GROW (the auto default) — adoption inserts the heavy keys
+        into the live table, which must be allowed to widen for them."""
+        if (
+            self._escalated
+            or not isinstance(self._inner, _ScanExecutor)
+            or self._resolved.saturation != SaturationPolicy.GROW
+            or not (stats.est_top_freq >= 0.25 and stats.est_groups > 4096)
+        ):
+            return
+        heavy = self._stats.heavy_keys[: self._plan.execution.num_registers]
+        if not heavy:
+            return
+        hybrid_plan = replace(
+            self._resolved, strategy="hybrid",
+            execution=replace(
+                self._resolved.execution,
+                heavy_keys=jnp.asarray(heavy, jnp.uint32),
+            ),
+        )
+        self._inner = _HybridExecutor.adopt(hybrid_plan, self._inner._op)
+        self._escalated = True
 
     def consume(self, chunk: Table) -> None:
-        if self._inner is None:
-            keys, _ = _chunk_keys_values(self._plan, chunk)
-            self._inner = make_executor(resolve_plan(self._plan, keys))
-            self._inner.open()
+        self._observe(chunk)
         self._inner.consume(chunk)
+
+    def consume_async(self, chunk: Table):
+        self._observe(chunk)
+        return self._inner.consume_async(chunk)
+
+    def poll(self, token) -> None:
+        # tokens stay valid across an escalation: hybrid adopts the SAME
+        # operator the tokens were dispatched on
+        self._inner.poll(token)
 
     def finalize(self) -> Table:
         if self._inner is None:
@@ -191,72 +300,60 @@ class _ResolvingExecutor:
 
 
 # ---------------------------------------------------------------------------
-# concurrent: the scan-compiled morsel pipeline
+# concurrent: the scan-compiled morsel pipeline (streams natively)
 
 
-class _ScanExecutor:
+class _ScanExecutor(_ExecutorBase):
     """Strategy ``concurrent`` (hash ticketing): a thin saturation-policy
-    shell around the scan-compiled :class:`GroupByOperator`."""
+    shell around the scan-compiled :class:`GroupByOperator`.  Streaming-
+    native — no chunk is ever retained: ``grow`` rides the operator's
+    in-stream bound growth (pause → widen ``key_by_ticket`` + accumulators →
+    resume at the paused morsel), so a misestimated bound recovers without
+    replaying the stream."""
 
     def __init__(self, plan: GroupByPlan):
         self._plan = plan
-        self._max_groups = plan.max_groups
-        self._rows = 0
-        self._chunks = [] if plan.saturation == SaturationPolicy.GROW else None
-        self._op = self._make_op(self._max_groups, first=True)
-
-    def _make_op(self, max_groups: int, first: bool) -> GroupByOperator:
-        p, ex = self._plan, self._plan.execution
-        return GroupByOperator(
-            key_columns=list(p.keys), aggs=list(p.aggs), max_groups=max_groups,
+        p, ex = plan, plan.execution
+        self._op = GroupByOperator(
+            key_columns=list(p.keys), aggs=list(p.aggs), max_groups=p.max_groups,
             morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
             use_kernel=ex.use_kernel, load_factor=ex.load_factor,
-            pipeline=ex.pipeline,
-            capacity=ex.capacity if first else None,
-            raw_keys=p.raw_keys,
+            pipeline=ex.pipeline, capacity=ex.capacity, raw_keys=p.raw_keys,
             check_overflow=p.saturation != SaturationPolicy.UNCHECKED,
+            grow_bound=p.saturation == SaturationPolicy.GROW,
         )
 
-    def open(self) -> None:
-        pass
-
     def consume(self, chunk: Table) -> None:
-        self._rows += chunk.num_rows
-        if self._chunks is not None:
-            self._chunks.append(chunk)
         self._op.consume(chunk)
 
+    def consume_async(self, chunk: Table):
+        return self._op.consume_async(chunk)
+
+    def poll(self, token) -> None:
+        self._op.poll(token)
+
     def finalize(self) -> Table:
-        while True:
-            try:
-                return self._op.finalize()
-            except GroupByOverflowError:
-                if self._chunks is None or self._max_groups >= self._rows:
-                    raise
-                self._max_groups = _next_bound(self._max_groups, self._rows)
-                self._op = self._make_op(self._max_groups, first=False)
-                for c in self._chunks:
-                    self._op.consume(c)
+        return self._op.finalize()
 
 
-class _BufferedExecutor:
-    """Shared chunk-buffering consume for the one-shot strategies
-    (sort/direct ticketing, pallas, partitioned, sharded): sorting, kernel
-    launches and mesh exchanges are pipeline breakers over the full input,
-    so chunks accumulate and the strategy pipeline runs at finalize."""
+class _BufferedExecutor(_ExecutorBase):
+    """Shared chunk-buffering consume for the genuinely ONE-SHOT strategies
+    (sort/direct ticketing): sorting and perfect-hash occupancy checks are
+    pipeline breakers over the full input, so chunks accumulate and the
+    strategy pipeline runs at finalize.  Tracks its buffer high-water mark
+    so streaming tests/benchmarks can assert who buffers and who doesn't."""
 
     def __init__(self, plan: GroupByPlan):
         self._plan = plan
         self._keys, self._vals, self._rows = [], [], 0
-
-    def open(self) -> None:
-        pass
+        self.peak_buffered_chunks = 0
 
     def consume(self, chunk: Table) -> None:
         keys, vals = _chunk_keys_values(self._plan, chunk)
         self._rows += int(keys.shape[0])
         self._keys.append(keys)
         self._vals.append(vals)
+        self.peak_buffered_chunks = max(self.peak_buffered_chunks, len(self._keys))
 
     def _gathered(self):
         keys = _concat(self._keys)
@@ -346,7 +443,7 @@ class _SortDirectExecutor(_BufferedExecutor):
 
 
 # ---------------------------------------------------------------------------
-# hybrid: heavy-hitter registers + concurrent tail
+# hybrid: heavy-hitter registers + concurrent tail (streams natively)
 
 
 @functools.partial(jax.jit, static_argnames=("kinds",))
@@ -380,12 +477,14 @@ def _hybrid_registers(heavy, km, vm, regs, *, kinds):
     return jax.lax.scan(body, regs, (km, vm))
 
 
-class _HybridExecutor:
+class _HybridExecutor(_ExecutorBase):
     """Strategy ``hybrid``: rows matching a small heavy-hitter candidate set
     accumulate into dense per-key registers (masked reductions — zero
     conflicts, the extreme thread-local case); the remaining tail flows
     through the scan-compiled concurrent pipeline, which the heavy-hitter
-    removal has just stripped of its only contention source."""
+    removal has just stripped of its only contention source.  Streams
+    natively: ``grow`` rides the tail operator's in-stream bound growth and
+    no chunks are retained."""
 
     def __init__(self, plan: GroupByPlan):
         self._plan = plan
@@ -396,23 +495,43 @@ class _HybridExecutor:
         self._heavy = None if hk is None else jnp.asarray(hk).reshape(-1).astype(jnp.uint32)
         self._regs = None
         self._op = None
-        self._max_groups = plan.max_groups
-        self._rows = 0
-        self._tail = [] if plan.saturation == SaturationPolicy.GROW else None
 
-    def open(self) -> None:
-        pass
+    @classmethod
+    def adopt(cls, plan: GroupByPlan, op: GroupByOperator) -> "_HybridExecutor":
+        """Mid-stream escalation handoff (auto re-planning): adopt a live
+        concurrent operator — table, accumulators, grown bound and any
+        in-flight tokens stay valid — as the tail pipeline.  The heavy keys
+        (``plan.execution.heavy_keys``) get tickets NOW (idempotent for
+        keys already seen); registers start at identity, because every
+        pre-switch heavy row is already counted in the tail accumulators.
+        """
+        self = cls(plan)
+        assert self._heavy is not None, "adopt() requires pinned heavy_keys"
+        if self._heavy.shape[0] == 0:
+            self._heavy = jnp.full((1,), EMPTY_KEY, jnp.uint32)
+        # The tail now arrives pre-canonicalized (the register stripper runs
+        # on the hash-combined key column), so the operator switches to the
+        # raw ``__key__`` calling convention — the key SPACE is unchanged.
+        op.key_columns = ["__key__"]
+        op.raw_keys = True
+        if op.grow_bound:
+            op._grow(int(self._heavy.shape[0]))  # headroom for the inserts
+        _, op._table = tk.get_or_insert(op._table, self._heavy)
+        self._op = op
+        self._regs = tuple(
+            up.init_acc(self._heavy.shape[0], k) for k in self._kinds
+        )
+        return self
 
-    def _make_op(self, max_groups: int, first: bool) -> GroupByOperator:
+    def _make_op(self, max_groups: int) -> GroupByOperator:
         p, ex = self._plan, self._plan.execution
         op = GroupByOperator(
             key_columns=["__key__"], aggs=list(p.aggs), max_groups=max_groups,
             morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
             use_kernel=ex.use_kernel, load_factor=ex.load_factor,
-            pipeline=ex.pipeline,
-            capacity=ex.capacity if first else None,
-            raw_keys=True,
+            pipeline=ex.pipeline, capacity=ex.capacity, raw_keys=True,
             check_overflow=p.saturation != SaturationPolicy.UNCHECKED,
+            grow_bound=p.saturation == SaturationPolicy.GROW,
         )
         # Heavy keys own the FIRST tickets: a key whose every occurrence is
         # absorbed by the register path still gets counted, and the register
@@ -422,11 +541,17 @@ class _HybridExecutor:
         return op
 
     def consume(self, chunk: Table) -> None:
+        self._op_poll(self.consume_async(chunk))
+
+    def _op_poll(self, token):
+        if token is not None:
+            self._op.poll(token)
+
+    def consume_async(self, chunk: Table):
         from repro.core.hybrid import detect_heavy_hitters
 
         keys, vals = _chunk_keys_values(self._plan, chunk)
         n = int(keys.shape[0])
-        self._rows += n
         if self._heavy is None:
             heavy = detect_heavy_hitters(keys, self._plan.execution.num_registers)
             self._heavy = jnp.asarray(heavy).reshape(-1).astype(jnp.uint32)
@@ -436,7 +561,9 @@ class _HybridExecutor:
             self._regs = tuple(
                 up.init_acc(self._heavy.shape[0], k) for k in self._kinds
             )
-            self._op = self._make_op(self._max_groups, first=True)
+            self._op = self._make_op(self._plan.max_groups)
+        from repro.engine.morsels import morselize_chunk
+
         km, vm, _ = morselize_chunk(keys, vals, self._plan.execution.morsel_rows)
         vtuple = tuple(
             vm[c] if c is not None else jnp.ones(km.shape, jnp.float32)
@@ -447,14 +574,15 @@ class _HybridExecutor:
         )
         tail = jnp.where(hmask.reshape(-1)[:n], jnp.uint32(EMPTY_KEY), keys)
         tail_chunk = Table({"__key__": tail, **{c: vals[c] for c in self._vcols}})
-        if self._tail is not None:
-            self._tail.append(tail_chunk)
-        self._op.consume(tail_chunk)
+        return self._op.consume_async(tail_chunk)
+
+    def poll(self, token) -> None:
+        self._op_poll(token)
 
     def _merged_state(self) -> up.AggState:
-        """Tail accumulators with the registers scattered into their
-        (pre-assigned) ticket slots — a pure function of the live state, so
-        ``finalize`` stays an idempotent read (stream-safe)."""
+        """Tail accumulators with the registers scattered into their ticket
+        slots — a pure function of the live state, so ``finalize`` stays an
+        idempotent read (stream-safe)."""
         op = self._op
         heavy_tickets = tk.lookup(op._table, self._heavy)  # -1 for padding
         accs = []
@@ -466,155 +594,496 @@ class _HybridExecutor:
     def finalize(self) -> Table:
         if self._op is None:
             raise ValueError("GroupByPlan executed over zero chunks")
-        while True:
-            op = self._op
-            tail_state = op._state
-            op._state = self._merged_state()
-            try:
-                return op.finalize()
-            except GroupByOverflowError:
-                if self._tail is None or self._max_groups >= self._rows:
-                    raise
-                self._max_groups = _next_bound(self._max_groups, self._rows)
-                self._op = self._make_op(self._max_groups, first=False)
-                for c in self._tail:
-                    self._op.consume(c)
-            finally:
-                # registers stay separate: consume may continue after a read
-                op._state = tail_state
+        op = self._op
+        tail_state = op._state
+        op._state = self._merged_state()
+        try:
+            return op.finalize()
+        finally:
+            # registers stay separate: consume may continue after a read
+            op._state = tail_state
 
 
 # ---------------------------------------------------------------------------
-# pallas: kernel-backed ticket → segment-update pipeline
+# incremental merge executors: per-chunk strategy pipeline + carried table
+# (pallas, partitioned)
 
 
-class _PallasExecutor(_BufferedExecutor):
+class _IncrementalMergeExecutor(_ExecutorBase):
+    """Streaming shell for strategies whose pipeline is a one-shot program
+    over its input (kernel launches, worker exchanges): run the pipeline
+    over EACH chunk, then merge the chunk's bounded partial result (at most
+    ``max_groups`` (key, partial) entries) into a carried ticket table +
+    merge accumulators.  State is O(max_groups); no chunks are retained.
+
+    Saturation: the per-chunk pipeline recovers chunk-locally under GROW
+    (strategy-specific, one blocking sync per chunk); the carried UNION
+    bound grows by padding ``key_by_ticket`` and the merge accumulators
+    (tickets are stable) before a chunk that could overflow it merges.
+    RAISE accumulates sticky device-side flags and checks once at finalize
+    (zero per-chunk syncs); UNCHECKED never syncs and truncates.
+
+    The FIRST chunk's raw partial is held un-merged (still O(max_groups),
+    not the chunk) and lowered into the carried table only when a second
+    chunk arrives: single-chunk executions — every legacy adapter —
+    materialize the strategy's NATIVE layout bit-for-bit (the Pallas fuzzy
+    ticketer's gapped ticket ranges survive; the merge would compact them).
+    """
+
+    def __init__(self, plan: GroupByPlan):
+        self._plan = plan
+        self._specs = expand_agg_specs(plan.aggs)
+        self._max_groups = plan.max_groups          # carried union bound
+        self._chunk_bound = plan.max_groups         # per-chunk pipeline bound
+        self._rows = 0
+        self._host_count = 0                        # union count mirror (GROW)
+        self._ovf = jnp.zeros((), jnp.bool_)        # sticky chunk-loss flag
+        self._pending = None                        # first chunk's raw partial
+        self._merged_any = False
+        self._table = tk.make_table(
+            table_capacity(plan.max_groups, plan.execution.load_factor),
+            max_groups=plan.max_groups,
+        )
+        self._accs = {
+            spec: up.init_acc(plan.max_groups, spec[1]) for spec in self._specs
+        }
+
+    # subclass: run the strategy pipeline over one chunk, honoring
+    # ``self._chunk_bound`` (and growing it under GROW); returns
+    # (key_by_ticket, {spec: raw partial acc}, count, device ovf flag)
+    def _chunk_partial(self, keys, vals):
+        raise NotImplementedError
+
+    def _grow_carried(self, new_max: int) -> None:
+        from repro.core import resize
+
+        self._table = resize.grow_bound(
+            self._table, new_max, self._plan.execution.load_factor
+        )
+        for spec, acc in self._accs.items():
+            pad = jnp.full((new_max - acc.shape[0],), up.neutral(spec[1]), acc.dtype)
+            self._accs[spec] = jnp.concatenate([acc, pad])
+        self._max_groups = new_max
+
+    def _merge(self, partial) -> None:
+        p = self._plan
+        kbt, partials, count, ovf = partial
+        if p.saturation == SaturationPolicy.GROW:
+            issued = int(jax.device_get(count))
+            if self._host_count + issued > self._max_groups:
+                self._grow_carried(
+                    max(4 * self._max_groups, self._host_count + issued, 64)
+                )
+        tickets, self._table = tk.get_or_insert(self._table, kbt)
+        for spec, acc in partials.items():
+            merge_kind = _MERGE_KIND[spec[1]]
+            self._accs[spec] = up.scatter_update(
+                self._accs[spec], tickets, acc, kind=merge_kind
+            )
+        if p.saturation == SaturationPolicy.GROW:
+            self._host_count = int(jax.device_get(self._table.count))
+        else:
+            self._ovf = self._ovf | ovf
+        self._merged_any = True
+
+    def consume(self, chunk: Table) -> None:
+        keys, vals = _chunk_keys_values(self._plan, chunk)
+        self._rows += int(keys.shape[0])
+        partial = self._chunk_partial(keys, vals)
+        if not self._merged_any and self._pending is None:
+            self._pending = partial  # single-chunk fast path: native layout
+            return
+        if self._pending is not None:
+            pending, self._pending = self._pending, None
+            self._merge(pending)
+        self._merge(partial)
+
+    def finalize(self) -> Table:
+        p = self._plan
+        if self._pending is not None and not self._merged_any:
+            # Exactly one chunk consumed: the strategy's own materialization,
+            # bit-identical to the pre-streaming executors (legacy adapters).
+            kbt, partials, count, ovf = self._pending
+            if p.saturation != SaturationPolicy.UNCHECKED and bool(
+                jax.device_get(ovf)
+            ):
+                raise _overflow_error(int(jax.device_get(count)), self._chunk_bound)
+            return build_result_table(
+                p.aggs, lambda c, k: partials[(c, k)], kbt, count,
+                self._chunk_bound,
+            )
+        if p.saturation != SaturationPolicy.UNCHECKED:
+            lost, union_ovf, count = jax.device_get(
+                (self._ovf, self._table.overflowed, self._table.count)
+            )
+            if bool(lost) or bool(union_ovf):
+                raise _overflow_error(int(count), self._max_groups)
+        return build_result_table(
+            p.aggs, lambda c, k: self._accs[(c, k)],
+            self._table.key_by_ticket, self._table.count, self._max_groups,
+        )
+
+
+class _PallasExecutor(_IncrementalMergeExecutor):
     """Strategy ``pallas``: the VMEM-resident ticket kernel + segment-update
-    kernel (kernels/ops.py).  The kernel's table state lives only for one
-    launch, so chunks buffer and the pipeline runs at finalize; ``grow``
-    re-launches with a grown bound/capacity (migrate == rebuild here)."""
+    kernel (kernels/ops.py) launched per chunk; the kernel's table state
+    lives only for one launch, so each chunk's bounded result merges into
+    the carried table.  GROW re-launches the CHUNK with a grown
+    bound/capacity (migrate == rebuild here) — never the stream."""
 
     def __init__(self, plan: GroupByPlan):
         super().__init__(plan)
-        self._specs = expand_agg_specs(plan.aggs)
+        ex = plan.execution
+        self._capacity = ex.capacity or table_capacity(
+            plan.max_groups, ex.load_factor
+        )
 
-    def finalize(self) -> Table:
+    def _chunk_partial(self, keys, vals):
         from repro.kernels import ops as kops
 
         p, ex = self._plan, self._plan.execution
-        keys, vals = self._gathered()
-        max_groups = p.max_groups
-        capacity = ex.capacity or table_capacity(max_groups, ex.load_factor)
+        bound, capacity = self._chunk_bound, self._capacity
         while True:
             tickets, kbt, count = kops.ticket(
-                keys, capacity=capacity, max_groups=max_groups,
+                keys, capacity=capacity, max_groups=bound,
                 morsel_size=ex.morsel_size, interpret=ex.interpret,
             )
-            if p.saturation == SaturationPolicy.UNCHECKED:
+            dropped_dev = jnp.any((tickets < 0) & (keys != jnp.uint32(EMPTY_KEY)))
+            ovf = (count > bound) | dropped_dev
+            if p.saturation != SaturationPolicy.GROW:
                 break
             issued = int(jax.device_get(count))
-            dropped = bool(jax.device_get(
-                jnp.any((tickets < 0) & (keys != jnp.uint32(EMPTY_KEY)))
-            ))
-            if issued <= max_groups and not dropped:
+            dropped = bool(jax.device_get(dropped_dev))
+            if issued <= bound and not dropped:
                 break
-            if p.saturation == SaturationPolicy.RAISE:
-                raise GroupByOverflowError(
-                    f"GROUP BY overflow: {issued} tickets issued against "
-                    f"max_groups={max_groups}"
-                    + (" and the probe table saturated (rows dropped)" if dropped else "")
-                    + "; results would be truncated. Re-run with a larger "
-                    "max_groups/capacity or SaturationPolicy.GROW."
-                )
             # GROW: the two overflow causes recover independently — an
             # undersized bound grows max_groups (rows-bounded), a saturated
             # probe table doubles capacity (the kernel-world migrate)
             grew = False
-            if issued > max_groups and max_groups < self._rows:
-                max_groups = _next_bound(max_groups, self._rows)
+            if issued > bound and bound < self._rows:
+                bound = _next_bound(bound, self._rows)
                 grew = True
             if dropped:
-                capacity = max(table_capacity(max_groups, ex.load_factor), 2 * capacity)
+                capacity = max(table_capacity(bound, ex.load_factor), 2 * capacity)
                 grew = True
             if not grew:
                 raise GroupByOverflowError(
                     f"GROUP BY overflow: {issued} tickets issued against "
-                    f"max_groups={max_groups} and growth cannot make progress."
+                    f"max_groups={bound} and growth cannot make progress."
                 )
-        accs = {}
+        self._chunk_bound, self._capacity = bound, capacity
+        partials = {}
         for col, kind in self._specs:
-            v = vals[col] if col is not None else jnp.ones(keys.shape, jnp.float32)
-            accs[(col, kind)] = kops.segment_aggregate(
-                tickets, v, num_groups=max_groups, kind=kind,
+            v = vals[col] if col else jnp.ones(keys.shape, jnp.float32)
+            partials[(col, kind)] = kops.segment_aggregate(
+                tickets, v, num_groups=bound, kind=kind,
                 strategy=ex.update or "scatter", morsel_size=ex.morsel_size,
                 interpret=ex.interpret,
             )
-        return build_result_table(
-            p.aggs, lambda c, k: accs[(c, k)], kbt, count, max_groups
-        )
+        return kbt, partials, count, ovf
 
 
-# ---------------------------------------------------------------------------
-# partitioned: the Leis-style baseline
-
-
-class _PartitionedExecutor(_BufferedExecutor):
-    """Strategy ``partitioned``: local pre-aggregation, exchange, partition-
-    wise final aggregation (core/partitioned.py).  One aggregate per plan
-    (the pre-agg table carries a single partial)."""
+class _PartitionedExecutor(_IncrementalMergeExecutor):
+    """Strategy ``partitioned``: the Leis-style preagg/exchange/final
+    pipeline (core/partitioned.py) runs per chunk — each chunk IS a morsel
+    batch through local pre-aggregation — and the chunk's partial groups
+    merge into the carried table.  One aggregate per plan (the pre-agg
+    table carries a single partial)."""
 
     def __init__(self, plan: GroupByPlan):
         super().__init__(plan)
         self._agg = _single_agg(plan, "partitioned")
 
-    def finalize(self) -> Table:
+    def _chunk_partial(self, keys, vals):
         from repro.core.partitioned import _partitioned_impl
 
         p, ex = self._plan, self._plan.execution
-        keys, vals = self._gathered_single(self._agg)
+        v = (vals[self._agg.column] if self._agg.column
+             else jnp.ones(keys.shape, jnp.float32))
         rem = (-int(keys.shape[0])) % ex.num_workers
         if rem:
             keys = jnp.concatenate([keys, jnp.full((rem,), EMPTY_KEY, jnp.uint32)])
-            vals = jnp.concatenate([vals, jnp.zeros((rem,), jnp.float32)])
-        max_groups = p.max_groups
+            v = jnp.concatenate([v, jnp.zeros((rem,), jnp.float32)])
+        bound = self._chunk_bound
         while True:
             res = _partitioned_impl(
-                keys, vals, kind=self._agg.kind, max_groups=max_groups,
+                keys, v, kind=self._agg.kind, max_groups=bound,
                 num_workers=ex.num_workers, preagg_capacity=ex.preagg_capacity,
                 morsel_size=ex.preagg_morsel,
             )
-            if p.saturation == SaturationPolicy.UNCHECKED:
+            ovf = res.num_groups > bound
+            if p.saturation != SaturationPolicy.GROW:
                 break
             issued = int(jax.device_get(res.num_groups))
-            if issued <= max_groups:
+            if issued <= bound:
                 break
-            if p.saturation == SaturationPolicy.RAISE or max_groups >= self._rows:
-                raise _overflow_error(issued, max_groups)
-            max_groups = _next_bound(max_groups, self._rows, issued=issued)
-        # res.values is already finalized; build_result_table's finalize
-        # pass is idempotent for sum/count/min/max
-        return build_result_table(
-            self._plan.aggs, lambda c, k: res.values, res.keys,
-            res.num_groups, max_groups,
-        )
+            if bound >= max(self._rows, issued):
+                raise _overflow_error(issued, bound)
+            bound = _next_bound(bound, self._rows, issued=issued)
+        self._chunk_bound = bound
+        spec = self._specs[0]
+        return res.keys, {spec: res.values}, res.num_groups, ovf
 
 
 # ---------------------------------------------------------------------------
 # sharded: mesh-level execution
 
 
-class _ShardedExecutor(_BufferedExecutor):
-    """Strategy ``sharded``: the paper's thread comparison at mesh scale.
-    ``shard_merge="dense_psum"`` is the fully-concurrent/thread-local
-    analogue (union-build global table, dense psum merge);
-    ``"all_to_all"`` is the Leis baseline with a real exchange.
+class _ShardedExecutor(_ExecutorBase):
+    """Strategy ``sharded``, streaming ingest: the paper's thread-local
+    method made incremental at mesh scale.  Every chunk is ``shard_map``'d
+    over the mesh and folded into per-device carried state (local ticket
+    table + dense partial vector — ``core.distributed.ShardedCarry``); the
+    cross-device merge runs ONCE at finalize:
 
-    Single-chunk consumes pass the (typically device-sharded) columns
-    through untouched, so the usual `execute(plan, table)` call keeps the
-    caller's sharding; multi-chunk streams concatenate at finalize.  After
-    ``finalize`` the strategy's raw mesh output is kept on ``.raw`` for
-    callers that need the per-device layout (the legacy adapters).
+      * ``shard_merge="dense_psum"`` — all-gather unique keys, union-build
+        the global table, one dense psum (the thread-local merge);
+      * ``"all_to_all"`` — exchange the per-device LOCAL AGGREGATES by key
+        partition, owners finish alone (the Leis baseline, its exchange now
+        over O(cardinality) state instead of buffered rows).
+
+    Device state is O(devices × capacity), independent of stream length —
+    no chunk is ever buffered.  Under GROW, consume runs the checked step:
+    devices pause in-scan before their bound/load-factor is crossed and the
+    host widens EVERY device's table (vmapped §4.4 migrate) and resumes
+    each device at its own paused morsel — the mesh analogue of the
+    operator's pause/migrate/resume, closing the "sharded saturation
+    re-runs the whole exchange" gap.  RAISE/UNCHECKED run the zero-sync
+    step; RAISE reads the sticky per-device loss flags once at finalize.
+
+    Single-chunk consumes keep the caller's device sharding (the legacy
+    adapters); after ``finalize`` the strategy's raw mesh output is kept on
+    ``.raw`` for callers that need the per-device layout.
     """
+
+    def __init__(self, plan: GroupByPlan):
+        self._plan = plan
+        self._agg = _single_agg(plan, "sharded")
+        ex = plan.execution
+        if ex.mesh is None:
+            raise ValueError("strategy 'sharded' requires ExecutionPolicy.mesh")
+        if ex.shard_merge not in ("dense_psum", "all_to_all"):
+            raise ValueError(f"unknown shard_merge {ex.shard_merge!r}")
+        self._ndev = ex.mesh.shape[ex.axis]
+        self._max_local = ex.max_local_groups or plan.max_groups
+        self._max_groups = plan.max_groups
+        self._checked = plan.saturation == SaturationPolicy.GROW
+        self._carry = None
+        self._step = None
+        self._rows = 0
+        self.raw = None
+
+    def _ensure_state(self):
+        from repro.core import distributed as dist
+
+        ex = self._plan.execution
+        if self._carry is None:
+            self._carry = dist.make_sharded_carry(
+                self._ndev, self._max_local, self._agg.kind,
+                capacity=table_capacity(self._max_local, ex.load_factor),
+            )
+        if self._step is None:
+            self._step = dist.make_sharded_consume_step(
+                ex.mesh, ex.axis, kind=self._agg.kind,
+                update=ex.update or "scatter", load_factor=ex.load_factor,
+                checked=self._checked,
+            )
+
+    def _morselize(self, keys, v):
+        """Split a chunk's rows contiguously over the mesh axis and each
+        device's slice into morsels: (ndev, num_morsels, morsel_rows)."""
+        ex = self._plan.execution
+        n = int(keys.shape[0])
+        per_dev = -(-n // self._ndev)
+        m = max(min(ex.morsel_rows, per_dev), 1)
+        per_dev = -(-per_dev // m) * m
+        total = per_dev * self._ndev
+        if total > n:
+            keys = jnp.concatenate(
+                [keys, jnp.full((total - n,), EMPTY_KEY, jnp.uint32)]
+            )
+            v = jnp.concatenate([v, jnp.zeros((total - n,), jnp.float32)])
+        return (
+            keys.reshape(self._ndev, per_dev // m, m),
+            v.reshape(self._ndev, per_dev // m, m),
+        )
+
+    def consume(self, chunk: Table) -> None:
+        self.poll(self.consume_async(chunk))
+
+    def consume_async(self, chunk: Table):
+        keys, vals = _chunk_keys_values(self._plan, chunk)
+        v = (vals[self._agg.column] if self._agg.column
+             else jnp.ones(keys.shape, jnp.float32))
+        self._rows += int(keys.shape[0])
+        self._ensure_state()
+        km, vm = self._morselize(keys, v)
+        start = jnp.zeros((self._ndev,), jnp.int32)
+        self._carry, halts = self._step(self._carry, km, vm, start)
+        return (km, vm, halts) if self._checked else None
+
+    def poll(self, token) -> None:
+        from repro.core import distributed as dist
+
+        if token is None:
+            return
+        km, vm, halts = token
+        ex = self._plan.execution
+        m = km.shape[2]
+        nm = km.shape[1]
+        replayed = None
+        while True:
+            halts_np = np.asarray(jax.device_get(halts))  # (ndev, nm)
+            firsts = [
+                int(np.flatnonzero(halts_np[d])[0]) if halts_np[d].any() else nm
+                for d in range(self._ndev)
+            ]
+            if all(f == nm for f in firsts):
+                return
+            counts = np.asarray(jax.device_get(self._carry.count))
+            top = int(counts.max())
+            new_maxl, new_cap = self._max_local, self._carry.capacity
+            if top > self._max_local - m:
+                new_maxl = max(4 * self._max_local, top + m, 64)
+            if top > ex.load_factor * self._carry.capacity:
+                new_cap = 2 * self._carry.capacity
+            new_cap = max(new_cap, table_capacity(new_maxl, ex.load_factor))
+            if (new_maxl, new_cap) == (self._max_local, self._carry.capacity):
+                if firsts == replayed:
+                    # pause survived an ungrown replay: force progress
+                    new_cap = 2 * self._carry.capacity
+                # else: an earlier token's poll already grew — just replay
+            if (new_maxl, new_cap) != (self._max_local, self._carry.capacity):
+                self._carry = dist.grow_sharded_carry(
+                    self._carry, new_maxl, new_cap, self._agg.kind
+                )
+                self._max_local = new_maxl
+            replayed = firsts
+            start = jnp.asarray(firsts, jnp.int32)
+            self._carry, halts = self._step(self._carry, km, vm, start)
+
+    def finalize_raw(self):
+        """Run the cross-device merge under the saturation policy over the
+        carried state and return the strategy's native output (sets
+        ``.raw``), skipping the unified-table compaction — the legacy
+        per-device adapters need only this.  Pure in the carry: mid-stream
+        snapshots merge, read, and keep consuming.
+
+        Returns ``(max_groups, count)`` alongside setting ``self.raw``.
+        """
+        from repro.core import distributed as dist
+
+        if self._carry is None:
+            raise ValueError("GroupByPlan executed over zero chunks")
+        p, ex = self._plan, self._plan.execution
+        max_groups = self._max_groups
+        if ex.shard_merge == "dense_psum":
+            while True:
+                res, lovf, union_ovf = dist.sharded_psum_merge(
+                    ex.mesh, ex.axis, self._carry,
+                    kind=self._agg.kind, max_groups=max_groups,
+                )
+                self.raw = res
+                if p.saturation == SaturationPolicy.UNCHECKED:
+                    return max_groups, res.num_groups
+                lost, uovf, issued = (int(x) for x in jax.device_get(
+                    (lovf, union_ovf, res.num_groups)
+                ))
+                if lost > 0:
+                    # keys dropped at a device BEFORE the union — only
+                    # reachable under RAISE (GROW's checked consume pauses
+                    # instead of dropping)
+                    raise GroupByOverflowError(
+                        "sharded GROUP BY overflow: a per-device table "
+                        f"exceeded its local bound ({self._max_local}); "
+                        "dropped keys never reach the merge. Use "
+                        "SaturationPolicy.GROW or larger bounds."
+                    )
+                if uovf == 0 and issued <= max_groups:
+                    self._max_groups = max_groups
+                    return max_groups, res.num_groups
+                if p.saturation == SaturationPolicy.RAISE or max_groups >= self._rows:
+                    raise _overflow_error(issued, max_groups)
+                # GROW at the union: re-merge over the carried state with a
+                # wider global bound — cheap, no rows involved
+                max_groups = _next_bound(
+                    max_groups, self._rows,
+                    issued=issued if issued > max_groups else None,
+                )
+        else:
+            pc = ex.partition_capacity
+            while True:
+                keys_p, vals_p, counts_p, overflow_p, lovf = (
+                    dist.sharded_exchange_merge(
+                        ex.mesh, ex.axis, self._carry, kind=self._agg.kind,
+                        max_groups=max_groups, partition_capacity=pc,
+                    )
+                )
+                self.raw = (keys_p, vals_p, counts_p, overflow_p)
+                count = jnp.sum(counts_p)
+                if p.saturation == SaturationPolicy.UNCHECKED:
+                    return max_groups, count
+                lost, bucket_ovf, issued = (int(x) for x in jax.device_get(
+                    (lovf, jnp.sum(overflow_p), count)
+                ))
+                if lost > 0:
+                    raise GroupByOverflowError(
+                        "sharded GROUP BY overflow: a per-device table "
+                        f"exceeded its local bound ({self._max_local}); "
+                        "dropped entries never reach the exchange. Use "
+                        "SaturationPolicy.GROW or larger bounds."
+                    )
+                if bucket_ovf > 0:
+                    # GROW: double the per-partition bucket capacity and
+                    # re-run the exchange over the carried state.  One
+                    # source device can send a partition at most its whole
+                    # local table, so max_local bounds the doubling.
+                    base = pc or max(2 * self._max_local // self._ndev, 16)
+                    if (p.saturation != SaturationPolicy.GROW
+                            or base >= self._max_local):
+                        raise GroupByOverflowError(
+                            "partitioned exchange dropped entries (partition "
+                            "bucket overflow); raise ExecutionPolicy."
+                            "partition_capacity or use SaturationPolicy.GROW"
+                        )
+                    pc = min(2 * base, self._max_local)
+                    continue
+                if issued <= max_groups:
+                    self._max_groups = max_groups
+                    return max_groups, count
+                if p.saturation == SaturationPolicy.RAISE or max_groups >= self._rows:
+                    raise _overflow_error(issued, max_groups)
+                max_groups = _next_bound(max_groups, self._rows, issued=issued)
+
+    def finalize(self) -> Table:
+        max_groups, count = self.finalize_raw()
+        if self._plan.execution.shard_merge == "dense_psum":
+            kbt, acc = self.raw.keys, self.raw.values
+        else:
+            # Unify the per-partition outputs: stable compaction of each
+            # owner's valid prefix (partitions are disjoint, so the keys
+            # are globally unique).  Pure jnp — no host round-trip.
+            keys_p, vals_p, counts_p, _ = self.raw
+            ndev = self._ndev
+            per_dev = keys_p.shape[0] // ndev
+            idx = jnp.arange(keys_p.shape[0])
+            valid = (idx % per_dev) < jnp.take(counts_p.reshape(-1), idx // per_dev)
+            order = jnp.argsort(~valid, stable=True)
+            kbt = jnp.take(keys_p.reshape(-1), order)[:max_groups]
+            acc = jnp.take(vals_p.reshape(-1), order)[:max_groups]
+        return build_result_table(
+            self._plan.aggs, lambda c, k: acc, kbt, count, max_groups,
+        )
+
+
+class _BufferedShardedExecutor(_BufferedExecutor):
+    """The PR-2 buffer-everything sharded path, kept behind
+    ``ExecutionPolicy(sharded_ingest="buffered")`` as the A/B baseline for
+    ``benchmarks/bench_stream.py``: every chunk's columns gather on host
+    and the whole mesh pipeline (including the per-row preagg + spill
+    exchange) runs over the concatenated rows at finalize — O(total rows)
+    state, the memory-pressure failure mode the streaming executor
+    removes."""
 
     def __init__(self, plan: GroupByPlan):
         super().__init__(plan)
@@ -628,7 +1097,7 @@ class _ShardedExecutor(_BufferedExecutor):
     def finalize_raw(self):
         """Run the mesh pipeline under the saturation policy and return the
         strategy's native output (sets ``.raw``), skipping the unified-table
-        compaction — the legacy per-device adapters need only this.
+        compaction.
 
         Returns ``(max_groups, count)`` alongside setting ``self.raw``.
         """
@@ -706,9 +1175,6 @@ class _ShardedExecutor(_BufferedExecutor):
         if self._plan.execution.shard_merge == "dense_psum":
             kbt, acc = self.raw.keys, self.raw.values
         else:
-            # Unify the per-partition outputs: stable compaction of each
-            # owner's valid prefix (partitions are disjoint, so the keys
-            # are globally unique).  Pure jnp — no host round-trip.
             keys_p, vals_p, counts_p, _ = self.raw
             ndev = self._plan.execution.mesh.shape[self._plan.execution.axis]
             per_dev = keys_p.shape[0] // ndev
@@ -722,4 +1188,4 @@ class _ShardedExecutor(_BufferedExecutor):
         )
 
 
-__all__ = ["make_executor", "resolve_plan"]
+__all__ = ["make_executor", "resolve_plan", "resolve_plan_stats"]

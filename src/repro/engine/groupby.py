@@ -105,9 +105,55 @@ def expand_agg_specs(aggs: Sequence[AggSpec]) -> tuple:
     return tuple(dict.fromkeys(specs))
 
 
-@functools.partial(jax.jit, static_argnames=("update_fn", "load_factor", "checked"))
+def make_pause_scan_body(start, threshold, bound_slack, apply_update):
+    """THE checked pause/commit morsel body, shared by the single-device
+    consume scan below and the per-device mesh consume step
+    (``core.distributed.make_sharded_consume_step``) so the §4.4 pause
+    protocol lives in exactly one place.
+
+    Invariant every caller depends on (deferred-poll safety, grow without
+    replay): **a pausing morsel commits nothing** — the pre-morsel room
+    check (load-factor threshold, plus bound headroom when ``bound_slack``
+    is not None) halts BEFORE ticketing, and a morsel that saturates the
+    probe table mid-flight has its state update dropped (published inserts
+    are idempotent under replay).  ``apply_update(state, tickets, vals)``
+    folds one ticketed morsel into the caller's accumulator pytree (a full
+    ``AggState`` for the engine, a single dense vector per device on the
+    mesh)."""
+
+    def body(carry, xs):
+        table, state, halted = carry
+        idx, keys, vals = xs
+        wants = idx >= start
+        needs_room = table.count > threshold
+        if bound_slack is not None:
+            needs_room = needs_room | (table.count > bound_slack)
+        halt_grow = wants & ~halted & needs_room
+        halted = halted | halt_grow
+        live = wants & ~halted
+        mkeys = jnp.where(live, keys, jnp.uint32(EMPTY_KEY))
+        tickets, table = tk.get_or_insert(table, mkeys)
+        # Saturation: a valid row came back unticketed (no reachable empty
+        # slot).  The morsel does not commit — its published inserts are
+        # idempotent under replay, and its updates are dropped below.
+        sat = jnp.any((tickets < 0) & (mkeys != jnp.uint32(EMPTY_KEY)))
+        new_state = apply_update(state, tickets, vals)
+        commit = live & ~sat
+        state = jax.tree_util.tree_map(
+            lambda new, old: jnp.where(commit, new, old), new_state, state
+        )
+        halt_now = halt_grow | (live & sat)
+        halted = halted | halt_now
+        return (table, state, halted), halt_now
+
+    return body
+
+
+@functools.partial(
+    jax.jit, static_argnames=("update_fn", "load_factor", "checked", "grow_bound")
+)
 def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor,
-                  checked=True):
+                  checked=True, grow_bound=False):
     """One fused pass over a chunk's morsels: scan (probe→ticket→update).
 
     Morsels with index < ``start`` are skipped (resume support).  Before each
@@ -115,6 +161,12 @@ def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor,
     needs growth (load factor crossed) or fails to fully ticket (probe table
     saturated), the scan pauses: that morsel and everything after become
     no-ops and its index is flagged in the returned per-morsel ``halts``.
+
+    ``grow_bound=True`` additionally pauses when the NEXT morsel could issue
+    tickets past ``max_groups`` (count > max_groups - morsel_rows): the
+    pause fires before anything is dropped, so the host can widen the bound
+    (``resize.grow_bound`` + ``updates.grow_agg_state``) and resume — bound
+    misestimates recover in-stream with no chunk replay.
 
     ``checked=False`` is the paper's perfect-estimate regime: no growth or
     saturation checks trace at all — the table never migrates, every morsel
@@ -124,12 +176,19 @@ def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor,
     """
     capacity = table.capacity
     threshold = int(load_factor * capacity)
+    # Static headroom: pause while there is still room for a full morsel.
+    bound_slack = table.max_groups - km.shape[1]
 
-    def body(carry, xs):
-        table, state, halted = carry
-        idx, keys, vals = xs
-        wants = idx >= start
-        if not checked:
+    if checked:
+        body = make_pause_scan_body(
+            start, threshold, bound_slack if grow_bound else None,
+            lambda s, t, v: up.update_agg_state(s, t, v, update_fn),
+        )
+    else:
+        def body(carry, xs):
+            table, state, halted = carry
+            idx, keys, vals = xs
+            wants = idx >= start
             mkeys = jnp.where(wants, keys, jnp.uint32(EMPTY_KEY))
             tickets, table = tk.get_or_insert(table, mkeys)
             new_state = up.update_agg_state(state, tickets, vals, update_fn)
@@ -137,24 +196,6 @@ def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor,
                 lambda new, old: jnp.where(wants, new, old), new_state, state
             )
             return (table, state, halted), jnp.zeros((), jnp.bool_)
-        # Pre-morsel pause check — the host loop's maybe_resize, in-scan.
-        halt_grow = wants & ~halted & (table.count > threshold)
-        halted = halted | halt_grow
-        live = wants & ~halted
-        mkeys = jnp.where(live, keys, jnp.uint32(EMPTY_KEY))
-        tickets, table = tk.get_or_insert(table, mkeys)
-        # Saturation: a valid row came back unticketed (no reachable empty
-        # slot).  The morsel does not commit — its published inserts are
-        # idempotent under replay, and its updates are dropped below.
-        sat = jnp.any((tickets < 0) & (mkeys != jnp.uint32(EMPTY_KEY)))
-        new_state = up.update_agg_state(state, tickets, vals, update_fn)
-        commit = live & ~sat
-        state = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(commit, new, old), new_state, state
-        )
-        halt_now = halt_grow | (live & sat)
-        halted = halted | halt_now
-        return (table, state, halted), halt_now
 
     idxs = jnp.arange(km.shape[0], dtype=jnp.int32)
     (table, state, _), halts = jax.lax.scan(
@@ -176,6 +217,7 @@ class GroupByOperator:
     capacity: int | None = None       # probe-table slots; None → table_capacity
     raw_keys: bool = False            # single pre-hashed uint32 key column
     check_overflow: bool = True       # False = paper's perfect-estimate regime
+    grow_bound: bool = False          # widen max_groups in-stream (no replay)
 
     def __post_init__(self):
         cap = self.capacity or table_capacity(self.max_groups, self.load_factor)
@@ -201,8 +243,24 @@ class GroupByOperator:
         (selection-vector idiom): their combined key becomes the EMPTY
         sentinel, which ticketing skips.
         """
+        self.poll(self.consume_async(chunk))
+
+    def consume_async(self, chunk: Table):
+        """Dispatch one chunk's consume scan WITHOUT blocking on its control
+        signals.  Returns an opaque in-flight token that MUST later be
+        handed to :meth:`poll` (in dispatch order); ``None`` means there is
+        nothing to poll (host pipeline, unchecked regime, poisoned stream).
+
+        This is the double-buffered ingest seam: while the device runs the
+        dispatched scan, the host is free to stage (morselize) the next
+        chunk.  Deferring ``poll`` is safe because a chunk that pauses
+        commits nothing from the paused morsel onward, and every subsequent
+        chunk's scan re-evaluates the same pause condition at its first
+        morsel — so later in-flight chunks no-op until the host catches up,
+        and replay happens in chunk order when their tokens are polled.
+        """
         if self._overflowed and self.check_overflow:
-            return  # poisoned: skip the scan, finalize raises anyway
+            return None  # poisoned: skip the scan, finalize raises anyway
         keys, cols = chunk_key_column(chunk, self.key_columns, self.raw_keys)
         value_cols = sorted({c for c, _ in self._state.specs if c is not None})
         km, vm, num = morselize_chunk(
@@ -210,7 +268,7 @@ class GroupByOperator:
         )
         if self.pipeline == "host":
             self._consume_host_loop(km, vm, num)
-            return
+            return None
         if not self.check_overflow:
             # Perfect-estimate regime (unchecked): one pass, fixed capacity,
             # no migrations and NO blocking sync — rows past the bound (or a
@@ -220,27 +278,69 @@ class GroupByOperator:
                 update_fn=self._update_fn, load_factor=self.load_factor,
                 checked=False,
             )
+            return None
+        table, state, halts = _consume_scan(
+            self._table, self._state, km, vm, jnp.int32(0),
+            update_fn=self._update_fn, load_factor=self.load_factor,
+            grow_bound=self.grow_bound,
+        )
+        self._table, self._state = table, state
+        return (km, vm, halts, table.overflowed)
+
+    def poll(self, token) -> None:
+        """Resolve one in-flight chunk: read its control signals (ONE
+        blocking device round-trip) and run pause → migrate/grow → resume
+        until the chunk is fully consumed."""
+        if token is None:
             return
-        start = 0
+        km, vm, halts, overflowed = token
+        replayed = -1  # morsel we already optimistically replayed ungrown
         while True:
-            table, state, halts = _consume_scan(
-                self._table, self._state, km, vm, jnp.int32(start),
-                update_fn=self._update_fn, load_factor=self.load_factor,
-            )
-            self._table, self._state = table, state
-            # one blocking round-trip per chunk for both control signals
-            overflowed, halts_np = jax.device_get((table.overflowed, halts))
-            if bool(overflowed):
+            overflowed_np, halts_np = jax.device_get((overflowed, halts))
+            if bool(overflowed_np):
                 self._overflowed = True
                 return  # poisoned: finalize raises instead of truncating
             flagged = np.flatnonzero(halts_np)
             if flagged.size == 0:
                 return
-            # Pause → migrate → resume (§4.4).  One device round-trip per
-            # growth event instead of one per morsel; accumulators are
-            # ticket-indexed so migration never touches them.
-            self._table = resize.migrate(self._table, 2 * self._table.capacity)
+            # Pause → migrate/grow → resume (§4.4).  One device round-trip
+            # per growth event instead of one per morsel; accumulators are
+            # ticket-indexed so capacity migration never touches them.
             start = int(flagged[0])
+            if not self._grow(km.shape[1]) and start == replayed:
+                # The pause survived a replay with no growth condition met
+                # (an earlier in-flight chunk's poll already grew, or a
+                # boundary-saturated probe cluster): force a doubling so
+                # the replay loop always makes progress.
+                self._table = resize.migrate(self._table, 2 * self._table.capacity)
+            replayed = start
+            table, state, halts = _consume_scan(
+                self._table, self._state, km, vm, jnp.int32(start),
+                update_fn=self._update_fn, load_factor=self.load_factor,
+                grow_bound=self.grow_bound,
+            )
+            self._table, self._state = table, state
+            overflowed = table.overflowed
+
+    def _grow(self, morsel_rows: int) -> bool:
+        """Host side of a pause: widen whatever the pause was about — the
+        cardinality bound (``grow_bound`` headroom crossed), the probe
+        capacity (load factor crossed), or both.  Returns False when neither
+        condition holds against the CURRENT state (the pause may have been
+        handled already by an earlier in-flight chunk's poll — deferred
+        ingest re-checks instead of blindly growing)."""
+        count = int(jax.device_get(self._table.count))
+        grew = False
+        if self.grow_bound and count > self.max_groups - morsel_rows:
+            new_max = max(4 * self.max_groups, count + morsel_rows, 64)
+            self._table = resize.grow_bound(self._table, new_max, self.load_factor)
+            self._state = up.grow_agg_state(self._state, new_max)
+            self.max_groups = new_max
+            grew = True
+        if count > self.load_factor * self._table.capacity:
+            self._table = resize.migrate(self._table, 2 * self._table.capacity)
+            grew = True
+        return grew
 
     def _consume_host_loop(self, km, vm, num) -> None:
         """Reference pipeline (the pre-scan implementation): one eager Python
@@ -250,7 +350,10 @@ class GroupByOperator:
         capacity, rows past a saturated table drop)."""
         for i in range(num):
             if self.check_overflow:
-                self._table = resize.maybe_resize(self._table, self.load_factor)
+                if self.grow_bound:
+                    self._grow(km.shape[1])  # bound headroom + load factor
+                else:
+                    self._table = resize.maybe_resize(self._table, self.load_factor)
             tickets, self._table = tk.get_or_insert(self._table, km[i])
             # Saturation recovery (bounded probe loop's ticket==-1 contract):
             # migrate and replay the morsel, same as the scan path's pause.

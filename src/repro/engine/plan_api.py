@@ -35,11 +35,30 @@ The seven legacy entry points survive as thin adapters over this API with
 identical signatures (`concurrent_groupby`, `partitioned_groupby`,
 `hybrid_groupby`, the two sharded variants, `groupby_pallas`, and
 `engine.groupby.groupby`).
+
+Streaming is first-class: aggregation consumes an UNBOUNDED pull-based
+stream of chunks, not a table that fits in memory.  Anything that yields
+``Table`` chunks is a :class:`ChunkSource` (a ``chunks()`` method, a plain
+iterable/iterator of tables, or a single ``Table``; ``repro.data.pipeline``
+ships adapters for arrays and the synthetic LM stream):
+
+    handle = plan.stream(source)       # StreamHandle: nothing consumed yet
+    handle.pump(8)                     # pull + aggregate 8 chunks
+    partial = handle.snapshot()        # idempotent mid-stream materialize
+    result = handle.result()           # drain the source, finalize
+
+    result = plan.collect(source)      # stream + result() in one call
+
+``stream`` overlaps host staging with device compute (double-buffered
+ingest: up to ``ExecutionPolicy.prefetch`` chunks are dispatched before the
+oldest one's control signals are read) and every strategy except the
+sort/direct one-shots holds state independent of the stream length.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field, replace
-from typing import Any, Sequence
+from typing import Any, Iterable, Iterator, Sequence
 
 import jax.numpy as jnp
 
@@ -75,6 +94,9 @@ class ExecutionPolicy:
     use_kernel: bool = False          # concurrent: Pallas segment-update scan body
     ticketing: str = "hash"           # concurrent: hash | sort | direct
     key_domain: int | None = None     # direct ticketing: bounded key domain
+    # streaming ingest
+    prefetch: int = 2                 # in-flight chunks before the oldest poll
+    sharded_ingest: str = "stream"    # stream (carried state) | buffered (PR-2 A/B)
     # pallas strategy
     morsel_size: int = 1024           # kernel grid morsel
     interpret: bool | None = None     # None → auto (False on TPU)
@@ -144,21 +166,132 @@ class GroupByPlan:
     def run(self, table: Table) -> Table:
         return execute(self, table)
 
+    def stream(self, source, *, prefetch: int | None = None) -> "StreamHandle":
+        """Open a pull-based streaming aggregation over ``source`` (any
+        :class:`ChunkSource`: an object with ``chunks()``, an iterable of
+        ``Table`` chunks, or a single ``Table``).  Nothing is consumed
+        until the returned handle is pumped; ``prefetch`` overrides
+        ``execution.prefetch`` (0 = fully synchronous ingest)."""
+        from repro.engine.executors import make_executor
+
+        ex = make_executor(self)
+        ex.open()
+        pf = self.execution.prefetch if prefetch is None else prefetch
+        return StreamHandle(ex, iter_chunks(source), prefetch=pf)
+
+    def collect(self, source) -> Table:
+        """Stream ``source`` to exhaustion and return the final result —
+        the streaming front door (``run`` is ``collect`` of a one-chunk
+        source)."""
+        return self.stream(source).result()
+
+
+def iter_chunks(source) -> Iterator[Table]:
+    """Canonicalize anything chunk-shaped into an iterator of ``Table``s:
+    a single ``Table`` (one chunk), a :class:`ChunkSource` (``chunks()``
+    method — ``engine.plans.Scan`` and the ``repro.data.pipeline`` adapters
+    qualify), or a plain iterable/iterator of tables."""
+    if isinstance(source, Table):
+        return iter((source,))
+    if hasattr(source, "chunks"):
+        return iter(source.chunks())
+    if isinstance(source, (Iterator, Iterable)):
+        return iter(source)
+    raise TypeError(
+        f"not a chunk source: {type(source).__name__} (expected a Table, an "
+        "object with .chunks(), or an iterable of Tables)"
+    )
+
+
+class StreamHandle:
+    """A streaming GROUP BY in flight: pull-based, double-buffered,
+    snapshot-able.
+
+    The handle pulls chunks from its source on demand (``pump`` /
+    ``result``), dispatching each through the executor's ``consume_async``
+    seam and deferring the blocking control-signal read (``poll``) until
+    ``prefetch`` newer chunks have been dispatched — so the host stages
+    chunk *k+1* (source generation, key canonicalization, morselization)
+    while the device still runs chunk *k*.
+
+    ``snapshot()`` is an idempotent mid-stream read: every streaming
+    executor's ``finalize`` is a pure function of its carried state, so the
+    groups seen so far materialize without disturbing consumption.
+    ``result()`` drains the source and returns the terminal table (further
+    pumping raises).
+    """
+
+    def __init__(self, executor, chunks: Iterator[Table], prefetch: int = 2):
+        self._ex = executor
+        self._chunks = chunks
+        self._prefetch = max(int(prefetch), 0)
+        self._inflight: deque = deque()
+        self._result: Table | None = None
+        self.chunks_consumed = 0
+        self.rows_consumed = 0
+
+    @property
+    def closed(self) -> bool:
+        return self._result is not None
+
+    @property
+    def peak_buffered_chunks(self) -> int:
+        """Executor-retained chunk high-water mark (0 for every streaming
+        strategy; the in-flight prefetch window is not retention)."""
+        return getattr(self._ex, "peak_buffered_chunks", 0)
+
+    def _dispatch(self, chunk: Table) -> None:
+        token = self._ex.consume_async(chunk)
+        self.chunks_consumed += 1
+        self.rows_consumed += chunk.num_rows
+        if token is not None:
+            self._inflight.append(token)
+        while len(self._inflight) > self._prefetch:
+            self._ex.poll(self._inflight.popleft())
+
+    def _drain_inflight(self) -> None:
+        while self._inflight:
+            self._ex.poll(self._inflight.popleft())
+
+    def pump(self, max_chunks: int | None = None) -> int:
+        """Pull and consume up to ``max_chunks`` chunks (all remaining when
+        ``None``).  Returns how many were consumed — fewer than asked means
+        the source is exhausted."""
+        if self.closed:
+            raise ValueError("stream already finalized via result()")
+        n = 0
+        while max_chunks is None or n < max_chunks:
+            chunk = next(self._chunks, None)
+            if chunk is None:
+                break
+            self._dispatch(chunk)
+            n += 1
+        return n
+
+    def snapshot(self) -> Table:
+        """Materialize the groups aggregated so far WITHOUT closing the
+        stream: drains the in-flight window (the executor state must be
+        settled), then reads the executor's idempotent finalize.  Calling
+        it twice without pumping returns identical tables."""
+        if self.closed:
+            return self._result
+        self._drain_inflight()
+        return self._ex.finalize()
+
+    def result(self) -> Table:
+        """Drain the source, settle in-flight chunks, finalize, and close
+        the handle (idempotent — repeated calls return the same table)."""
+        if not self.closed:
+            self.pump()
+            self._drain_inflight()
+            self._result = self._ex.finalize()
+        return self._result
+
 
 def execute(plan: GroupByPlan, table: Table) -> Table:
-    """One-shot execution: the whole table as a single pipeline chunk.
-
-    For streaming (morsel-driven) execution, use
-    :func:`repro.engine.executors.make_executor` directly and feed chunks
-    through ``consume`` — this is exactly what ``engine.plans.Aggregate``
-    does.
-    """
-    from repro.engine.executors import make_executor
-
-    ex = make_executor(plan)
-    ex.open()
-    ex.consume(table)
-    return ex.finalize()
+    """One-shot execution: the whole table as a single pipeline chunk
+    through the same streaming path everything else uses."""
+    return plan.collect(table)
 
 
 def value_columns(aggs: Sequence[AggSpec]) -> tuple:
@@ -200,8 +333,10 @@ __all__ = [
     "GroupByPlan",
     "SaturationPolicy",
     "STRATEGIES",
+    "StreamHandle",
     "arrays_as_table",
     "as_group_result",
     "execute",
+    "iter_chunks",
     "value_columns",
 ]

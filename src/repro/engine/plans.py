@@ -6,9 +6,11 @@ routing stats).  Operators are composed push-style: each chunk flows
 scan → filter → aggregate, mirroring morsel-driven pipelining.
 
 ``Aggregate`` lowers to the declarative :class:`GroupByPlan` front door
-(engine/plan_api.py) and streams chunks through its executor — a strategy
-sweep over the same query is a one-field change (``strategy=``), and the
-saturation policy is explicit instead of an accident of the entry point.
+(engine/plan_api.py) and streams chunks through ``plan.stream`` (the
+pull-based, double-buffered ingest path) — a strategy sweep over the same
+query is a one-field change (``strategy=``), and the saturation policy is
+explicit instead of an accident of the entry point.  ``Scan`` satisfies
+the :class:`ChunkSource` protocol (it has ``chunks()``).
 """
 from __future__ import annotations
 
@@ -18,7 +20,6 @@ from typing import Callable, Sequence
 import jax.numpy as jnp
 
 from repro.engine.columns import Table
-from repro.engine.executors import make_executor
 from repro.engine.groupby import AggSpec
 from repro.engine.plan_api import ExecutionPolicy, GroupByPlan
 
@@ -74,10 +75,8 @@ class Aggregate:
         )
 
     def run(self, plan_source: Scan, filt: Filter | None = None) -> Table:
-        ex = make_executor(self.plan())
-        ex.open()
-        for chunk in plan_source.chunks():
-            if filt is not None:
-                chunk = filt.apply(chunk)  # adds __mask__; consume() handles it
-            ex.consume(chunk)
-        return ex.finalize()
+        chunks = plan_source.chunks()
+        if filt is not None:
+            # adds __mask__; the executor's key canonicalization handles it
+            chunks = (filt.apply(c) for c in chunks)
+        return self.plan().collect(chunks)

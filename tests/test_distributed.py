@@ -1,23 +1,94 @@
-"""Distributed tests — run in subprocesses with simulated device counts so
-the main pytest process keeps exactly 1 device."""
+"""Distributed tests — run in persistent WARMED subprocesses so the main
+pytest process keeps exactly 1 device.
+
+One worker interpreter per simulated device count, shared by every test
+that needs that count (tier-1 wall-clock: the jax import + XLA client
+startup — several seconds per interpreter — is paid once per device count
+instead of once per test).  Each request executes in a fresh globals dict,
+so tests stay isolated at the Python level while sharing the warm jax
+runtime and its compilation cache."""
+import atexit
 import json
 import os
 import subprocess
 import sys
+import tempfile
+import threading
 
 import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# Reads one JSON line {"code": ...} per request, execs it with stdout
+# captured, replies with one JSON line {"out": last-printed-line} or
+# {"err": traceback}.  Native stderr goes to a log file (see _get_worker).
+_DRIVER = r"""
+import contextlib, io, json, sys, traceback
+for line in sys.stdin:
+    req = json.loads(line)
+    buf = io.StringIO()
+    try:
+        with contextlib.redirect_stdout(buf):
+            exec(compile(req["code"], "<distributed-test>", "exec"),
+                 {"__name__": "__worker__"})
+        out = buf.getvalue().strip().splitlines()
+        payload = {"out": out[-1] if out else ""}
+    except BaseException:
+        payload = {"err": traceback.format_exc()[-3000:],
+                   "out": buf.getvalue()[-2000:]}
+    sys.stdout.write(json.dumps(payload) + "\n")
+    sys.stdout.flush()
+"""
 
-def run_with_devices(k: int, code: str) -> dict:
+_WORKERS: dict[int, tuple] = {}
+
+
+def _get_worker(k: int):
+    worker = _WORKERS.get(k)
+    if worker is not None and worker[0].poll() is None:
+        return worker
     env = dict(os.environ)
     env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={k}"
     env["PYTHONPATH"] = os.path.join(REPO, "src")
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, env=env, timeout=900)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return json.loads(out.stdout.strip().splitlines()[-1])
+    errlog = tempfile.NamedTemporaryFile(
+        mode="w+", prefix=f"distworker{k}-", suffix=".log", delete=False
+    )
+    proc = subprocess.Popen(
+        [sys.executable, "-c", _DRIVER], stdin=subprocess.PIPE,
+        stdout=subprocess.PIPE, stderr=errlog, text=True, env=env,
+    )
+    _WORKERS[k] = (proc, errlog.name)
+    return _WORKERS[k]
+
+
+@atexit.register
+def _shutdown_workers():
+    for proc, _ in _WORKERS.values():
+        if proc.poll() is None:
+            proc.kill()
+
+
+def run_with_devices(k: int, code: str, timeout: float = 900) -> dict:
+    proc, errpath = _get_worker(k)
+    proc.stdin.write(json.dumps({"code": code}) + "\n")
+    proc.stdin.flush()
+    reply: dict = {}
+
+    def _read():
+        reply["line"] = proc.stdout.readline()
+
+    reader = threading.Thread(target=_read, daemon=True)
+    reader.start()
+    reader.join(timeout)
+    if not reply.get("line"):
+        proc.kill()
+        _WORKERS.pop(k, None)
+        with open(errpath) as f:
+            tail = f.read()[-3000:]
+        pytest.fail(f"device-count-{k} worker hung or died; stderr:\n{tail}")
+    payload = json.loads(reply["line"])
+    assert "err" not in payload, payload.get("err")
+    return json.loads(payload["out"])
 
 
 def test_concurrent_sharded_matches_oracle():
