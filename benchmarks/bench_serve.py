@@ -1,0 +1,185 @@
+"""Multi-query serving benchmark — the scheduler PR's acceptance gate.
+
+Three measurements over N concurrent small GROUP BY queries on the
+``AggregationServer`` (serve/query_server.py):
+
+  * ``batched_vs_sequential`` — N same-shape queries through the server's
+    batched dispatch (same ``batch_signature`` → one fused device launch
+    per scheduling round, ``executors.consume_batched``) vs N sequential
+    ``plan.collect()`` calls.  The gate: batched ≥ 1.5× for N ≥ 8, with
+    per-query results BIT-IDENTICAL to the sequential run (verified every
+    timed iteration; a mismatch aborts the benchmark).
+  * ``fairness`` — a 4-chunk query sharing two slots with a 32-chunk query
+    (batching off, deficit round-robin): reports both completion clocks and
+    the short query's finish relative to its own length — ≈2× its chunk
+    count under strict alternation, NOT after the long stream drains.
+  * ``cancel_latency`` — cancelling a mid-stream query: µs until its slot
+    is reusable, and the admission of the queued next query (slot index
+    handoff) is asserted.
+
+Emits ``common.emit`` CSV; ``--json PATH`` writes the raw numbers
+(CI uploads ``BENCH_serve.json`` per PR, next to ``BENCH_stream.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import N_ROWS, emit
+from repro.data.pipeline import ArraySource
+from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy
+
+NQ = 8            # concurrent queries (gate: ≥8)
+CHUNKS = 16       # chunks per query stream
+CHUNK_ROWS = 128  # small chunks: per-dispatch overhead dominates
+MAX_GROUPS = 256
+CARD = 128
+
+
+def _plan(chunk_rows: int) -> GroupByPlan:
+    return GroupByPlan(
+        keys=("k",), aggs=(AggSpec("sum", "v"), AggSpec("count")),
+        strategy="concurrent", max_groups=MAX_GROUPS,
+        saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
+        execution=ExecutionPolicy(update="scatter", morsel_rows=chunk_rows),
+    )
+
+
+def _query_columns(nq: int, rows: int, card: int = CARD):
+    cols = []
+    for q in range(nq):
+        rng = np.random.default_rng(100 + q)
+        cols.append({
+            "k": jnp.asarray(rng.integers(0, card, size=rows).astype(np.uint32)),
+            "v": jnp.asarray(rng.standard_normal(rows).astype(np.float32)),
+        })
+    return cols
+
+
+def _sources(cols, chunk_rows: int):
+    return [ArraySource(c, chunk_rows=chunk_rows) for c in cols]
+
+
+def _block(tables):
+    for t in tables:
+        jax.block_until_ready(t.columns)
+
+
+def run(n: int | None = None, json_path: str | None = None):
+    from repro.serve.query_server import AggregationServer
+
+    # The query shape is pinned small on purpose: the gate measures how the
+    # server amortizes N per-chunk dispatches into one, which only shows on
+    # dispatch-bound queries — scaling rows with --rows/BENCH_ROWS would
+    # turn this into a compute benchmark (bench_e2e covers that).
+    del n
+    chunk_rows = CHUNK_ROWS
+    rows = CHUNKS * chunk_rows
+    results = {"n_queries": NQ, "chunks_per_query": CHUNKS,
+               "rows_per_query": rows}
+    plan = _plan(chunk_rows)
+    cols = _query_columns(NQ, rows)
+
+    # --- batched scheduling vs sequential collect -------------------------
+    def sequential():
+        return [plan.collect(s) for s in _sources(cols, chunk_rows)]
+
+    def batched():
+        server = AggregationServer(slots=NQ, batch_queries=True)
+        handles = [server.submit(plan, s) for s in _sources(cols, chunk_rows)]
+        server.run_until_idle()
+        return [h.result() for h in handles]
+
+    _block(sequential())  # warmup: compiles the per-query scan
+    _block(batched())     # warmup: compiles the stacked/vmapped scan
+    seq_ts, bat_ts = [], []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        seq_out = sequential()
+        _block(seq_out)
+        seq_ts.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        bat_out = batched()
+        _block(bat_out)
+        bat_ts.append(time.perf_counter() - t0)
+        # gate: batched results bit-identical to sequential, every iteration
+        for q, (a, b) in enumerate(zip(seq_out, bat_out)):
+            for col in a.columns:
+                assert np.array_equal(np.asarray(a[col]), np.asarray(b[col])), (
+                    f"batched result diverged: query {q} column {col}"
+                )
+    us_seq = float(np.median(seq_ts) * 1e6)
+    us_bat = float(np.median(bat_ts) * 1e6)
+    speedup = us_seq / max(us_bat, 1e-9)
+    results.update(sequential_us=us_seq, batched_us=us_bat,
+                   batched_speedup=speedup, bit_identical=True)
+    emit("serve_sequential", us_seq, f"nq={NQ} chunks={CHUNKS}")
+    emit("serve_batched", us_bat, "one fused dispatch per round")
+    emit("serve_batched_speedup", speedup,
+         "≥1.5 gate PASS" if speedup >= 1.5 else "<1.5 gate FAIL")
+
+    # --- fairness: short query against a long stream, two slots -----------
+    short_chunks, long_chunks = 4, 32
+    fair_cols = _query_columns(2, long_chunks * chunk_rows)
+    server = AggregationServer(slots=2, batch_queries=False)
+    short = server.submit(
+        plan, ArraySource(
+            {k: v[: short_chunks * chunk_rows] for k, v in fair_cols[0].items()},
+            chunk_rows=chunk_rows),
+        tenant="short",
+    )
+    long = server.submit(
+        plan, ArraySource(fair_cols[1], chunk_rows=chunk_rows), tenant="long")
+    server.run_until_idle()
+    results["fairness"] = {
+        "short_chunks": short_chunks, "long_chunks": long_chunks,
+        "short_finished_at": short._slot.finished_at,
+        "long_finished_at": long._slot.finished_at,
+    }
+    emit("serve_fair_short_done_clock", short._slot.finished_at,
+         f"{short_chunks}-chunk query; ≈2×(chunks+1) = round-robin, "
+         f"{long_chunks}+ = starved")
+    emit("serve_fair_long_done_clock", long._slot.finished_at,
+         f"{long_chunks}-chunk query")
+
+    # --- cancellation latency ---------------------------------------------
+    lat_us, admit_ok = [], True
+    for _ in range(5):
+        server = AggregationServer(slots=1)
+        victim = server.submit(
+            plan, ArraySource(cols[0], chunk_rows=chunk_rows), tenant="a")
+        waiter = server.submit(
+            plan, ArraySource(cols[1], chunk_rows=chunk_rows), tenant="b")
+        server.step(2)  # victim mid-stream, waiter queued behind the slot
+        t0 = time.perf_counter()
+        victim.cancel()
+        lat_us.append((time.perf_counter() - t0) * 1e6)
+        admit_ok = admit_ok and waiter.slot == 0  # freed slot handed over
+        _block([waiter.result()])
+    results["cancel_latency_us"] = float(np.median(lat_us))
+    results["cancel_admits_queued"] = admit_ok
+    emit("serve_cancel_latency", results["cancel_latency_us"],
+         f"slot handoff {'ok' if admit_ok else 'BROKEN'}")
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write BENCH_serve.json here")
+    ap.add_argument("--rows", type=int, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived", flush=True)
+    run(n=args.rows, json_path=args.json)

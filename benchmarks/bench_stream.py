@@ -13,7 +13,9 @@ Three comparisons over the same multi-chunk stream:
     (``ExecutionPolicy.sharded_ingest``) on simulated devices, reporting
     peak host RSS and the executor's retained-chunk high-water mark
     alongside wall-clock (each mode runs in its OWN subprocess so the RSS
-    high-water is per-mode).
+    high-water is per-mode).  LEGACY A/B: ``sharded_ingest="buffered"`` is
+    deprecated (it now warns at executor construction) and this comparison
+    is kept only until the buffered path is deleted.
 
 Emits ``common.emit`` CSV; ``--json PATH`` additionally writes the raw
 numbers as a JSON artifact (CI uploads ``BENCH_stream.json`` per PR to

@@ -3,9 +3,11 @@
   PYTHONPATH=src python -m benchmarks.report [--dir experiments/dryrun]
 
 Prints markdown: §Dry-run (memory + collectives per cell, both meshes),
-§Roofline (three terms, bottleneck, useful-flops fraction — single-pod) and
+§Roofline (three terms, bottleneck, useful-flops fraction — single-pod),
 §Streaming (bench_stream's BENCH_stream.json artifact: stream-vs-one-shot,
-ingest-overlap and buffered-vs-streaming-sharded numbers, incl. peak RSS).
+ingest-overlap and buffered-vs-streaming-sharded numbers, incl. peak RSS)
+and §Serving (bench_serve's BENCH_serve.json artifact: batched-vs-
+sequential multi-query dispatch, fairness clocks, cancellation latency).
 """
 from __future__ import annotations
 
@@ -87,13 +89,42 @@ def streaming_table(path):
               f"{r['sharded_stream_speedup']:.2f}× ({gate} ≥1× gate) |")
 
 
+def serving_table(path):
+    with open(path) as f:
+        r = json.load(f)
+    print(f"Queries: {r.get('n_queries', '—')} concurrent × "
+          f"{r.get('chunks_per_query', '—')} chunks × "
+          f"{r.get('rows_per_query', '—')} rows\n")
+    print("| metric | value |")
+    print("|---|---|")
+    if "sequential_us" in r:
+        print(f"| sequential collect ×N | {r['sequential_us']/1e3:.1f} ms |")
+        print(f"| batched scheduling | {r['batched_us']/1e3:.1f} ms |")
+        gate = "PASS" if r["batched_speedup"] >= 1.5 else "FAIL"
+        ident = "bit-identical" if r.get("bit_identical") else "DIVERGED"
+        print(f"| batched speedup | {r['batched_speedup']:.2f}× "
+              f"({gate} ≥1.5× gate, results {ident}) |")
+    fair = r.get("fairness")
+    if fair:
+        print(f"| fairness: {fair['short_chunks']}-chunk query finish clock | "
+              f"{fair['short_finished_at']} (vs {fair['long_chunks']}-chunk "
+              f"neighbour at {fair['long_finished_at']}) |")
+    if "cancel_latency_us" in r:
+        handoff = "ok" if r.get("cancel_admits_queued") else "BROKEN"
+        print(f"| cancellation latency | {r['cancel_latency_us']:.0f} µs "
+              f"(slot handoff {handoff}) |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--section", default="both",
-                    choices=["dryrun", "roofline", "streaming", "both"])
+                    choices=["dryrun", "roofline", "streaming", "serving",
+                             "both"])
     ap.add_argument("--stream-json", default="BENCH_stream.json",
                     help="bench_stream artifact for §Streaming")
+    ap.add_argument("--serve-json", default="BENCH_serve.json",
+                    help="bench_serve artifact for §Serving")
     args = ap.parse_args()
     cells = load(args.dir)
     if args.section in ("dryrun", "both"):
@@ -107,6 +138,10 @@ def main():
     if args.section in ("streaming", "both") and os.path.exists(args.stream_json):
         print("### Streaming ingest (bench_stream)\n")
         streaming_table(args.stream_json)
+        print()
+    if args.section in ("serving", "both") and os.path.exists(args.serve_json):
+        print("### Concurrent-query serving (bench_serve)\n")
+        serving_table(args.serve_json)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ def main() -> None:
         bench_plan,
         bench_resize,
         bench_roofline,
+        bench_serve,
         bench_stream,
         bench_ticketer,
         bench_ticketing,
@@ -43,6 +44,8 @@ def main() -> None:
         ("plan_sweep", lambda: bench_plan.run(n=n)),
         ("streaming", lambda: bench_stream.run(
             n=n, json_path=os.environ.get("BENCH_STREAM_JSON"))),
+        ("serving", lambda: bench_serve.run(
+            n=n, json_path=os.environ.get("BENCH_SERVE_JSON"))),
         ("roofline", bench_roofline.run),
     ]
     for name, fn in suites:

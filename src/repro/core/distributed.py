@@ -61,13 +61,19 @@ from repro.parallel.sharding import shard_map
 # many chunks streamed through.
 
 
+_MERGE_KIND = {"count": "sum", "sum": "sum", "min": "min", "max": "max"}
+
+
 class ShardedCarry(NamedTuple):
     """Per-device streaming aggregation state (leading axis = mesh devices).
 
     ``keys/tickets`` are each device's probe table, ``kbt`` its ticket-
     ordered unique-key list (the only thing the merge ever communicates —
     the paper's indirection payoff), ``acc`` its dense ticket-indexed
-    partial aggregates.  ``ovf`` is sticky per device: local tickets past
+    partial aggregates: a full ``updates.AggState`` pytree whose leaves are
+    ``(ndev, max_local)`` — one accumulator per ``(column, kind)`` spec, so
+    sharded plans carry multi-aggregate/mean queries exactly like the
+    single-device engine.  ``ovf`` is sticky per device: local tickets past
     the local bound, or rows dropped by a saturated probe table.
     """
 
@@ -76,7 +82,7 @@ class ShardedCarry(NamedTuple):
     kbt: jnp.ndarray      # (ndev, max_local) uint32
     count: jnp.ndarray    # (ndev,) int32
     ovf: jnp.ndarray      # (ndev,) bool
-    acc: jnp.ndarray      # (ndev, max_local) float32
+    acc: up.AggState      # leaves (ndev, max_local) float32
 
     @property
     def capacity(self) -> int:
@@ -87,8 +93,12 @@ class ShardedCarry(NamedTuple):
         return self.kbt.shape[1]
 
 
-def make_sharded_carry(ndev: int, max_local: int, kind: str,
+def make_sharded_carry(ndev: int, max_local: int, specs,
                        capacity: int | None = None) -> ShardedCarry:
+    """``specs`` = [(column|None, kind), ...] as produced by
+    ``engine.groupby.expand_agg_specs`` (mean already split into
+    sum+count)."""
+    specs = tuple(specs)
     cap = capacity or table_capacity(max_local)
     return ShardedCarry(
         keys=jnp.full((ndev, cap), EMPTY_KEY, jnp.uint32),
@@ -96,11 +106,14 @@ def make_sharded_carry(ndev: int, max_local: int, kind: str,
         kbt=jnp.full((ndev, max_local), EMPTY_KEY, jnp.uint32),
         count=jnp.zeros((ndev,), jnp.int32),
         ovf=jnp.zeros((ndev,), jnp.bool_),
-        acc=up.init_acc(max_local, kind)[None].repeat(ndev, axis=0),
+        acc=up.AggState(specs, tuple(
+            up.init_acc(max_local, k)[None].repeat(ndev, axis=0)
+            for _, k in specs
+        )),
     )
 
 
-def make_sharded_consume_step(mesh, axis: str, *, kind: str, update: str,
+def make_sharded_consume_step(mesh, axis: str, *, update: str,
                               load_factor: float, checked: bool):
     """Build the jitted per-chunk consume step: shard_map over the mesh,
     each device folding its (num_morsels, morsel_rows) slice of the chunk
@@ -129,8 +142,9 @@ def make_sharded_consume_step(mesh, axis: str, *, kind: str, update: str,
         table = tk.TicketTable(
             keys[0], tickets[0], kbt[0], count[0], ovf[0]
         )
-        lacc = acc[0]
-        km0, vm0 = km[0], vm[0]
+        lacc = jax.tree_util.tree_map(lambda x: x[0], acc)
+        km0 = km[0]
+        vm0 = {c: v[0] for c, v in vm.items()}
         st = start[0]
         capacity = table.capacity
         threshold = int(load_factor * capacity)
@@ -144,21 +158,22 @@ def make_sharded_consume_step(mesh, axis: str, *, kind: str, update: str,
                 tks, table = tk.get_or_insert(table, k)
                 dropped = jnp.any((tks < 0) & (k != jnp.uint32(EMPTY_KEY)))
                 table = table._replace(overflowed=table.overflowed | dropped)
-                lacc = update_fn(lacc, tks, v, kind=kind)
+                lacc = up.update_agg_state(lacc, tks, v, update_fn)
                 return (table, lacc), jnp.zeros((), jnp.bool_)
 
             (table, lacc), halts = jax.lax.scan(body, (table, lacc), (km0, vm0))
         else:
             body = make_pause_scan_body(
                 st, threshold, bound_slack,
-                lambda lacc, tks, v: update_fn(lacc, tks, v, kind=kind),
+                lambda lacc, tks, v: up.update_agg_state(lacc, tks, v, update_fn),
             )
             (table, lacc, _), halts = jax.lax.scan(
                 body, (table, lacc, jnp.zeros((), jnp.bool_)), (idxs, km0, vm0)
             )
         return (
             table.keys[None], table.tickets[None], table.key_by_ticket[None],
-            table.count[None], table.overflowed[None], lacc[None], halts[None],
+            table.count[None], table.overflowed[None],
+            jax.tree_util.tree_map(lambda x: x[None], lacc), halts[None],
         )
 
     fn = shard_map(
@@ -187,21 +202,25 @@ def make_sharded_consume_step(mesh, axis: str, *, kind: str, update: str,
 
 
 def grow_sharded_carry(carry: ShardedCarry, new_max_local: int,
-                       new_capacity: int, kind: str) -> ShardedCarry:
+                       new_capacity: int) -> ShardedCarry:
     """Mesh analogue of the operator's pause-time growth: widen every
-    device's bound (pad ``kbt`` + accumulator — tickets are stable) and/or
-    migrate every device's probe table (vmapped contention-less §4.4
-    migration).  Uniform across devices so shapes stay static."""
+    device's bound (pad ``kbt`` + every accumulator with its kind's neutral
+    — tickets are stable) and/or migrate every device's probe table (vmapped
+    contention-less §4.4 migration).  Uniform across devices so shapes stay
+    static."""
     kbt, acc = carry.kbt, carry.acc
     if new_max_local > carry.max_local:
         ndev, pad = kbt.shape[0], new_max_local - carry.max_local
         kbt = jnp.concatenate(
             [kbt, jnp.full((ndev, pad), EMPTY_KEY, jnp.uint32)], axis=1
         )
-        acc = jnp.concatenate(
-            [acc, jnp.full((ndev, pad), up.neutral(kind, acc.dtype), acc.dtype)],
-            axis=1,
-        )
+        acc = up.AggState(acc.specs, tuple(
+            jnp.concatenate(
+                [a, jnp.full((ndev, pad), up.neutral(k, a.dtype), a.dtype)],
+                axis=1,
+            )
+            for (_, k), a in zip(acc.specs, acc.accs)
+        ))
     keys, tickets = carry.keys, carry.tickets
     if new_capacity > carry.capacity:
         migrated = jax.vmap(
@@ -213,22 +232,24 @@ def grow_sharded_carry(carry: ShardedCarry, new_max_local: int,
     return ShardedCarry(keys, tickets, kbt, carry.count, carry.ovf, acc)
 
 
-def sharded_psum_merge(mesh, axis: str, carry: ShardedCarry, *, kind: str,
+def sharded_psum_merge(mesh, axis: str, carry: ShardedCarry, *,
                        max_groups: int):
     """Dense-psum union merge of a streamed :class:`ShardedCarry` — steps
     2–5 of the fully concurrent mesh protocol (all-gather unique keys,
-    deterministic union replay, ticket translation, one dense psum), run
-    over O(devices × max_local) carried state instead of over rows.
+    deterministic union replay, ticket translation, one dense psum per
+    accumulator), run over O(devices × max_local) carried state instead of
+    over rows.
 
     Pure function of the carry, so mid-stream snapshots are free: the
     caller can merge, read, and keep consuming into the same carry.
-    Returns ``(GroupByResult, local_ovf, union_ovf)`` — the sticky
-    per-device loss flags (psum'd) and the union-table overflow, for the
-    saturation policy to inspect.
+    Returns ``(key_by_ticket, AggState, count, local_ovf, union_ovf)`` —
+    RAW (unfinalized) merged accumulators in global ticket order (the
+    result builder finalizes, composing mean from sum/count), plus the
+    sticky per-device loss flags (psum'd) and the union-table overflow, for
+    the saturation policy to inspect.
     """
     cap_global = table_capacity(max_groups)
     max_local = carry.max_local
-    merge_kind = {"count": "sum", "sum": "sum", "min": "min", "max": "max"}[kind]
 
     def local(kbt, lacc, ovf):
         local_keys = kbt[0]
@@ -240,17 +261,24 @@ def sharded_psum_merge(mesh, axis: str, carry: ShardedCarry, *, kind: str,
         mine = jax.lax.dynamic_slice_in_dim(
             gtickets, rank * max_local, max_local
         )
-        gacc = up.init_acc(max_groups, kind)
-        gacc = up.scatter_update(gacc, mine, lacc[0], kind=merge_kind)
-        if merge_kind == "sum":
-            gacc = jax.lax.psum(gacc, axis)
-        elif merge_kind == "min":
-            gacc = -jax.lax.pmax(-gacc, axis)
-        else:
-            gacc = jax.lax.pmax(gacc, axis)
+        merged = []
+        for (_, kind), la in zip(lacc.specs, tuple(
+            jax.tree_util.tree_map(lambda x: x[0], lacc).accs
+        )):
+            merge_kind = _MERGE_KIND[kind]
+            gacc = up.init_acc(max_groups, kind)
+            gacc = up.scatter_update(gacc, mine, la, kind=merge_kind)
+            if merge_kind == "sum":
+                gacc = jax.lax.psum(gacc, axis)
+            elif merge_kind == "min":
+                gacc = -jax.lax.pmax(-gacc, axis)
+            else:
+                gacc = jax.lax.pmax(gacc, axis)
+            merged.append(gacc)
+        gstate = up.AggState(lacc.specs, tuple(merged))
         lovf = jax.lax.psum(ovf[0].astype(jnp.int32), axis)
         govf = gtable.overflowed.astype(jnp.int32)
-        return gacc, gtable.key_by_ticket, gtable.count, lovf, govf
+        return gstate, gtable.key_by_ticket, gtable.count, lovf, govf
 
     fn = shard_map(
         local, mesh=mesh,
@@ -258,55 +286,66 @@ def sharded_psum_merge(mesh, axis: str, carry: ShardedCarry, *, kind: str,
         out_specs=(P(), P(), P(), P(), P()),
         check_vma=False,
     )
-    gacc, key_by_ticket, count, lovf, govf = fn(carry.kbt, carry.acc, carry.ovf)
-    return GroupByResult(key_by_ticket, up.finalize(kind, gacc), count), lovf, govf
+    gstate, key_by_ticket, count, lovf, govf = fn(carry.kbt, carry.acc, carry.ovf)
+    return key_by_ticket, gstate, count, lovf, govf
 
 
-def sharded_exchange_merge(mesh, axis: str, carry: ShardedCarry, *, kind: str,
+def sharded_exchange_merge(mesh, axis: str, carry: ShardedCarry, *,
                            max_groups: int, partition_capacity: int | None = None):
     """All_to_all exchange merge of a streamed :class:`ShardedCarry` — the
     Leis baseline's exchange run over per-device LOCAL AGGREGATES (each
     device's carried ticket table is its pre-aggregation, complete and
     spill-free, bounded by max_local) instead of over buffered raw rows.
+    Every accumulator of the carry's ``AggState`` rides the same exchange:
+    bucket rows are ``(key, acc_0..acc_V)`` so one all_to_all pair moves a
+    multi-aggregate query.
 
     Returns the partitioned strategy's native per-device layout
-    ``(keys_p, vals_p, counts_p, overflow_p)`` plus the psum'd sticky local
-    loss flag.  ``overflow_p`` counts partition-bucket drops (static-shape
-    exchange); callers grow ``partition_capacity`` and re-run — cheap,
-    since the input is carried state, not rows.
+    ``(keys_p, vals_p, counts_p, overflow_p)`` — ``vals_p`` a tuple of RAW
+    per-spec vectors aligned with ``carry.acc.specs`` — plus the psum'd
+    sticky local loss flag.  ``overflow_p`` counts partition-bucket drops
+    (static-shape exchange); callers grow ``partition_capacity`` and re-run
+    — cheap, since the input is carried state, not rows.
     """
     ndev = mesh.shape[axis]
     max_local = carry.max_local
-    merge_kind = {"count": "sum", "sum": "sum", "min": "min", "max": "max"}[kind]
+    specs = carry.acc.specs
+    merge_kinds = tuple(_MERGE_KIND[k] for _, k in specs)
     cap = partition_capacity or max(2 * max_local // ndev, 16)
 
     def local(kbt, lacc, ovf):
         allk = kbt[0]
-        allv = lacc[0]
+        allv = jnp.stack(
+            tuple(jax.tree_util.tree_map(lambda x: x[0], lacc).accs), axis=1
+        )  # (max_local, V)
         pid = (slot_hash(allk, ndev, seed=7)).astype(jnp.int32)
         pid = jnp.where(allk == EMPTY_KEY, ndev, pid)
         order = jnp.argsort(pid, stable=True)
-        pk, pv, pp = (jnp.take(x, order) for x in (allk, allv, pid))
+        pk, pp = jnp.take(allk, order), jnp.take(pid, order)
+        pv = jnp.take(allv, order, axis=0)
         pos = jnp.arange(pk.shape[0]) - jnp.searchsorted(pp, pp, side="left")
         overflow = jnp.sum((pos >= cap) & (pp < ndev))
         dest = jnp.where((pos < cap) & (pp < ndev), pp * cap + pos, ndev * cap)
         bk = jnp.full((ndev * cap + 1,), EMPTY_KEY, jnp.uint32).at[dest].set(pk)[:-1]
-        bv = jnp.full(
-            (ndev * cap + 1,), up.neutral(merge_kind), jnp.float32
+        neutral_row = jnp.stack([up.neutral(mk) for mk in merge_kinds])
+        bv = jnp.broadcast_to(
+            neutral_row, (ndev * cap + 1, len(specs))
         ).at[dest].set(pv)[:-1]
         bk = bk.reshape(ndev, cap)
-        bv = bv.reshape(ndev, cap)
+        bv = bv.reshape(ndev, cap, len(specs))
         xk = jax.lax.all_to_all(bk, axis, split_axis=0, concat_axis=0, tiled=False)
         xv = jax.lax.all_to_all(bv, axis, split_axis=0, concat_axis=0, tiled=False)
         xk = xk.reshape(-1)
-        xv = xv.reshape(-1)
+        xv = xv.reshape(-1, len(specs))
         tickets, key_by_ticket, cnt = tk.sort_ticketing(xk)
-        acc = up.init_acc(max_groups, merge_kind)
-        acc = up.sort_segment_update(acc, tickets, xv, kind=merge_kind)
+        vals = []
+        for j, ((_, kind), mk) in enumerate(zip(specs, merge_kinds)):
+            acc = up.init_acc(max_groups, kind)
+            vals.append(up.sort_segment_update(acc, tickets, xv[:, j], kind=mk))
         lovf = jax.lax.psum(ovf[0].astype(jnp.int32), axis)
         return (
             key_by_ticket[:max_groups],
-            up.finalize(kind, acc),
+            tuple(vals),
             cnt.reshape(1),
             overflow.reshape(1).astype(jnp.int32),
             lovf,

@@ -22,8 +22,10 @@ The strategies:
   * ``concurrent`` — the scan-compiled morsel pipeline (hash ticketing);
     streams natively, retains no chunks.  ``saturation="grow"`` rides the
     operator's in-stream pause→widen→resume bound growth (no replay).
-    ``execution.ticketing="sort"|"direct"`` selects the sort-based /
-    perfect-hash variants — the only genuinely ONE-SHOT executors left
+    ``execution.ticketing="direct"`` swaps in the perfect-hash variant
+    (ticket == key over a bounded domain — tickets are stable across
+    chunks, so it streams chunk-by-chunk with a carried accumulator);
+    ``ticketing="sort"`` is the one genuinely ONE-SHOT executor left
     (sorting is a pipeline breaker over the full input), documented as such.
   * ``hybrid``     — heavy-hitter register path + concurrent tail; streams
     (registers fold per chunk, the tail rides the scan pipeline).
@@ -35,15 +37,15 @@ The strategies:
     chunks (``core.distributed.ShardedCarry``) and ONE merge at finalize:
     state is O(devices × capacity), independent of the stream length.
     ``execution.sharded_ingest="buffered"`` keeps the PR-2 buffer-everything
-    path for A/B benchmarking.
+    path for A/B benchmarking (DEPRECATED — warns at construction).
 
 Saturation is enforced here, uniformly: every executor implements
 ``raise`` / ``grow`` / ``unchecked`` (plan_api.SaturationPolicy).  ``grow``
 no longer replays retained chunks — the streaming executors either widen
 their bound in-stream BEFORE anything is dropped (concurrent, hybrid,
 sharded: §4.4 pause/migrate/resume applied to the cardinality bound) or
-recover per chunk and grow their carried merge state (pallas, partitioned).
-Only the one-shot sort/direct executors still gather the stream.
+recover per chunk and grow their carried merge state (pallas, partitioned,
+direct).  Only the one-shot sort executor still gathers the stream.
 """
 from __future__ import annotations
 
@@ -58,7 +60,7 @@ from repro.core import adaptive
 from repro.core import ticketing as tk
 from repro.core import updates as up
 from repro.core.hashing import EMPTY_KEY, table_capacity
-from repro.engine.columns import Table, chunk_key_column
+from repro.engine.columns import Table, chunk_key_column, combine_keys
 from repro.engine.groupby import (
     GroupByOperator,
     GroupByOverflowError,
@@ -88,8 +90,10 @@ def make_executor(plan: GroupByPlan):
     if plan.strategy == "auto" or plan.max_groups is None:
         return _ResolvingExecutor(plan)
     if plan.strategy == "concurrent":
-        if plan.execution.ticketing in ("sort", "direct"):
-            return _SortDirectExecutor(plan)
+        if plan.execution.ticketing == "sort":
+            return _SortExecutor(plan)
+        if plan.execution.ticketing == "direct":
+            return _DirectExecutor(plan)
         return _ScanExecutor(plan)
     if plan.strategy == "hybrid":
         return _HybridExecutor(plan)
@@ -99,6 +103,17 @@ def make_executor(plan: GroupByPlan):
         return _PartitionedExecutor(plan)
     if plan.strategy == "sharded":
         if plan.execution.sharded_ingest == "buffered":
+            import warnings
+
+            warnings.warn(
+                "ExecutionPolicy(sharded_ingest='buffered') is deprecated "
+                "and will be removed in a future release; the default "
+                "streaming ingest (sharded_ingest='stream') carries "
+                "per-device state across chunks with O(devices × capacity) "
+                "memory instead of buffering every chunk.",
+                DeprecationWarning,
+                stacklevel=2,
+            )
             return _BufferedShardedExecutor(plan)
         return _ShardedExecutor(plan)
     raise ValueError(f"unknown strategy {plan.strategy!r}")
@@ -336,6 +351,155 @@ class _ScanExecutor(_ExecutorBase):
         return self._op.finalize()
 
 
+# ---------------------------------------------------------------------------
+# batched co-dispatch: N same-shape queries, ONE device launch per step
+#
+# The serving scheduler (serve/scheduler.py) co-schedules slot tasks that
+# share a ``batch_key``.  For GROUP BY streams the key is ``batch_signature``
+# below: plans with equal signatures run the SAME scan body over
+# identically-shaped (TicketTable, AggState) carries, so one chunk from each
+# of N queries can fold in a single jitted dispatch — stack the raw chunk
+# columns, stage + scan every lane inside one jit — amortizing N per-chunk
+# launch overheads into one (the continuous-batching speedup bench_serve.py
+# measures).
+
+
+def batch_signature(plan: GroupByPlan):
+    """Hashable co-dispatch key, or ``None`` when the plan is ineligible.
+
+    Eligible: the scan-compiled concurrent pipeline with hash ticketing and
+    a fixed bound — RAISE and UNCHECKED saturation only.  GROW needs
+    per-query host control flow (pause → migrate → resume) that cannot ride
+    a shared fused dispatch, kernels/host pipelines have their own launch
+    story, and sort/direct ticketing does not carry a probe table.  Two
+    plans with the same signature produce bit-identical per-query results
+    under batched stepping because each fused lane IS the sequential scan
+    body (same op order, same scatters).
+    """
+    ex = plan.execution
+    saturation = plan.saturation or (
+        SaturationPolicy.GROW if plan.max_groups is None else SaturationPolicy.RAISE
+    )
+    if (
+        plan.strategy != "concurrent"
+        or plan.max_groups is None
+        or ex.ticketing != "hash"
+        or ex.pipeline != "scan"
+        or ex.use_kernel
+        or saturation not in (SaturationPolicy.RAISE, SaturationPolicy.UNCHECKED)
+    ):
+        return None
+    return (
+        "scan",
+        plan.max_groups,
+        ex.capacity or table_capacity(plan.max_groups, ex.load_factor),
+        ex.morsel_rows,
+        ex.update or "scatter",
+        expand_agg_specs(plan.aggs),
+        saturation == SaturationPolicy.RAISE,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("raw_keys", "morsel_rows", "vcols", "update_fn", "check"),
+)
+def _batched_consume(tables, states, key_cols, val_cols, *, raw_keys,
+                     morsel_rows, vcols, update_fn, check):
+    """Fold chunk_i into (table_i, state_i) for every query in ONE dispatch.
+
+    The host hands over the RAW stacked chunk columns (each leaf
+    ``(n_queries, rows)``); key canonicalization, morsel padding and the
+    probe→ticket→update scan all run inside this single jitted call —
+    staged per-query on the host they cost more than the dispatches the
+    batching saves.  Lanes are compiled UNROLLED, not vmapped: a vmapped
+    probe ``while_loop`` runs every lane in lockstep to the worst lane's
+    probe count, which erases the win.  Each lane replays exactly the solo
+    path's op sequence (same canonicalization, same EMPTY padding, same
+    scan body), so per-query results are bit-identical to sequential
+    stepping.  ``check=True`` keeps RAISE's sticky device-side loss flag
+    per lane (a saturated probe table or a bound overflow poisons only
+    that query's finalize)."""
+    n_rows = key_cols[0].shape[1]
+    nm = max(-(-n_rows // morsel_rows), 1)
+    pad = nm * morsel_rows - n_rows
+
+    def stage(i):
+        # chunk_key_column + morselize_chunk, inlined per lane
+        if raw_keys:
+            keys = key_cols[0][i].reshape(-1).astype(jnp.uint32)
+        else:
+            keys = combine_keys(*(kc[i] for kc in key_cols))
+        if pad:
+            keys = jnp.concatenate(
+                [keys, jnp.full((pad,), EMPTY_KEY, keys.dtype)]
+            )
+        vm = []
+        for vc in val_cols:
+            v = vc[i].astype(jnp.float32)
+            if pad:
+                v = jnp.concatenate([v, jnp.zeros((pad,), jnp.float32)])
+            vm.append(v.reshape(nm, morsel_rows))
+        return keys.reshape(nm, morsel_rows), tuple(vm)
+
+    def one(table, state, km, vm):
+        def body(carry, xs):
+            table, state = carry
+            k, vt = xs
+            tickets, table = tk.get_or_insert(table, k)
+            if check:
+                dropped = jnp.any((tickets < 0) & (k != jnp.uint32(EMPTY_KEY)))
+                table = table._replace(overflowed=table.overflowed | dropped)
+            state = up.update_agg_state(
+                state, tickets, dict(zip(vcols, vt)), update_fn
+            )
+            return (table, state), None
+
+        (table, state), _ = jax.lax.scan(body, (table, state), (km, vm))
+        return table, state
+
+    outs = []
+    for i, (table, state) in enumerate(zip(tables, states)):
+        km, vm = stage(i)
+        outs.append(one(table, state, km, vm))
+    return tuple(o[0] for o in outs), tuple(o[1] for o in outs)
+
+
+def consume_batched(executors, chunks) -> None:
+    """Consume ``chunks[i]`` into ``executors[i]`` — one device dispatch for
+    the whole batch.  Every executor must come from plans with the SAME
+    ``batch_signature`` (the scheduler guarantees it).  The fast path
+    requires the round's chunks to share a row count and carry no
+    ``__mask__`` column: the raw columns stack in one op per column and
+    everything else happens inside the jit.  Ragged rounds (a stream's
+    short final chunk) fall back to per-query consumes — correctness never
+    depends on the fast path."""
+    assert len(executors) == len(chunks) >= 1
+    ops = [x._op for x in executors]
+    ref = ops[0]
+    if (
+        len(ops) == 1
+        or len({c.num_rows for c in chunks}) != 1
+        or any("__mask__" in c.columns for c in chunks)
+    ):
+        for x, chunk in zip(executors, chunks):
+            x.consume(chunk)
+        return
+    vcols = tuple(sorted({c for c, _ in ref._state.specs if c is not None}))
+    key_cols = tuple(
+        jnp.stack([c[k] for c in chunks]) for k in ref.key_columns
+    )
+    val_cols = tuple(jnp.stack([c[v] for c in chunks]) for v in vcols)
+    new_tables, new_states = _batched_consume(
+        tuple(op._table for op in ops), tuple(op._state for op in ops),
+        key_cols, val_cols,
+        raw_keys=ref.raw_keys, morsel_rows=ref.morsel_rows, vcols=vcols,
+        update_fn=ref._update_fn, check=ref.check_overflow,
+    )
+    for op, table, state in zip(ops, new_tables, new_states):
+        op._table, op._state = table, state
+
+
 class _BufferedExecutor(_ExecutorBase):
     """Shared chunk-buffering consume for the genuinely ONE-SHOT strategies
     (sort/direct ticketing): sorting and perfect-hash occupancy checks are
@@ -367,79 +531,135 @@ class _BufferedExecutor(_ExecutorBase):
         return keys, v
 
 
-class _SortDirectExecutor(_BufferedExecutor):
-    """Strategy ``concurrent`` with sort-based or perfect-hash (direct)
-    ticketing."""
+class _SortExecutor(_BufferedExecutor):
+    """Strategy ``concurrent`` with sort-based ticketing.  Sorting is a
+    genuine pipeline breaker (tickets are global sort ranks), so this is
+    the one remaining one-shot executor: chunks buffer and the pipeline
+    runs at finalize."""
+
+    def finalize(self) -> Table:
+        p, ex = self._plan, self._plan.execution
+        keys, vals = self._gathered()
+        max_groups = p.max_groups
+        tickets, kbt, count = tk.sort_ticketing(keys)
+        if p.saturation != SaturationPolicy.UNCHECKED:
+            issued = int(jax.device_get(count))
+            if issued > max_groups:
+                if p.saturation == SaturationPolicy.RAISE:
+                    raise _overflow_error(issued, max_groups)
+                max_groups = _next_bound(max_groups, self._rows, issued=issued)
+        update_fn = up.get_update_fn(ex.update or "scatter")
+        state = up.init_agg_state(expand_agg_specs(p.aggs), max_groups)
+        state = up.update_agg_state(state, tickets, vals, update_fn)
+        return build_result_table(p.aggs, state.get, kbt, count, max_groups)
+
+
+class _DirectExecutor(_ExecutorBase):
+    """Strategy ``concurrent`` with perfect-hash (direct) ticketing,
+    STREAMING: ticket == key, so tickets are stable across chunks and under
+    domain growth — each chunk folds straight into the carried ``AggState``
+    and no chunk is ever retained (the one-shot buffering this ticketing
+    used to share with sort was an artifact, not a data dependency).
+
+    RAISE/UNCHECKED consume with zero host syncs: out-of-domain drops and
+    occupancy past the bound accumulate in device-side sticky flags, read
+    once at finalize by the raise policy.  GROW syncs per chunk BEFORE
+    updating: an out-of-range chunk widens the domain to cover the largest
+    observed key (same rows-bounded limit as every other grow — a key space
+    far sparser than the row count means direct is the wrong ticketing),
+    pads the accumulators (tickets unaffected), and re-tickets only the
+    current chunk."""
 
     def __init__(self, plan: GroupByPlan):
-        if plan.execution.ticketing == "direct" and not plan.raw_keys:
+        if not plan.raw_keys:
             # direct ticketing is ticket == key: hash-combined keys leave
             # the bounded domain, so every row would silently miss
             raise ValueError(
                 "ticketing='direct' requires raw_keys=True (a single "
                 "bounded-domain uint32 key column)"
             )
-        super().__init__(plan)
+        self._plan = plan
+        ex = plan.execution
+        self._domain = ex.key_domain or plan.max_groups
+        self._bound = plan.max_groups
+        self._update_fn = up.get_update_fn(ex.update or "scatter")
+        self._state = None
+        self._rows = 0
+        self._dropped = jnp.zeros((), jnp.bool_)   # sticky: out-of-domain rows
+        self._max_ticket = jnp.full((), -1, jnp.int32)
+
+    def consume(self, chunk: Table) -> None:
+        p = self._plan
+        keys, vals = _chunk_keys_values(p, chunk)
+        self._rows += int(keys.shape[0])
+        if self._state is None:
+            self._state = up.init_agg_state(
+                expand_agg_specs(p.aggs), self._bound
+            )
+        tickets, _, _ = tk.direct_ticketing(keys, self._domain)
+        valid = keys != jnp.uint32(EMPTY_KEY)
+        if p.saturation == SaturationPolicy.GROW:
+            dropped, used = jax.device_get((
+                jnp.any((tickets < 0) & valid),
+                jnp.max(jnp.concatenate(
+                    [tickets.reshape(-1), jnp.full((1,), -1, jnp.int32)]
+                )) + 1,
+            ))
+            if bool(dropped) or int(used) > self._bound:
+                # the domain must cover the largest observed key VALUE;
+                # direct allocates O(domain) arrays, so keep the same
+                # rows-bound as every other grow
+                kmax = int(jax.device_get(
+                    jnp.max(jnp.where(valid, keys, jnp.uint32(0)))
+                ))
+                limit = max(4 * self._rows, 65536)
+                if kmax + 1 > limit:
+                    raise GroupByOverflowError(
+                        f"direct-ticketing overflow: observed key {kmax} "
+                        f"needs domain {kmax + 1}, past the rows-bounded "
+                        f"growth limit {limit} — the key space is too "
+                        "sparse for perfect-hash ticketing; use "
+                        "ticketing='hash' instead."
+                    )
+                self._domain = max(kmax + 1, self._domain)
+                # bound never shrinks mid-stream: earlier chunks already
+                # committed accumulator slots up to the current bound
+                self._bound = max(self._domain, self._bound, 64)
+                self._state = up.grow_agg_state(self._state, self._bound)
+                tickets, _, _ = tk.direct_ticketing(keys, self._domain)
+        else:
+            self._dropped = self._dropped | jnp.any((tickets < 0) & valid)
+            self._max_ticket = jnp.maximum(
+                self._max_ticket, jnp.max(jnp.concatenate(
+                    [tickets.reshape(-1), jnp.full((1,), -1, jnp.int32)]
+                ))
+            )
+        self._state = up.update_agg_state(
+            self._state, tickets, vals, self._update_fn
+        )
 
     def finalize(self) -> Table:
-        p, ex = self._plan, self._plan.execution
-        keys, vals = self._gathered()
-        max_groups = p.max_groups
-        if ex.ticketing == "sort":
-            tickets, kbt, count = tk.sort_ticketing(keys)
-            if p.saturation != SaturationPolicy.UNCHECKED:
-                issued = int(jax.device_get(count))
-                if issued > max_groups:
-                    if p.saturation == SaturationPolicy.RAISE:
-                        raise _overflow_error(issued, max_groups)
-                    max_groups = _next_bound(max_groups, self._rows, issued=issued)
-        else:
-            domain = ex.key_domain or max_groups
-            tickets, kbt, count = tk.direct_ticketing(keys, domain)
-            if p.saturation != SaturationPolicy.UNCHECKED:
-                valid = keys != jnp.uint32(EMPTY_KEY)
-                # out-of-domain rows get ticket -1 (dropped); in-domain
-                # occupancy past the bound truncates the accumulators
-                dropped, used = jax.device_get((
-                    jnp.any((tickets < 0) & valid),
-                    jnp.max(jnp.concatenate(
-                        [tickets.reshape(-1), jnp.full((1,), -1, jnp.int32)]
-                    )) + 1,
-                ))
-                if bool(dropped) or int(used) > max_groups:
-                    if p.saturation == SaturationPolicy.RAISE:
-                        raise GroupByOverflowError(
-                            "direct-ticketing overflow: keys outside "
-                            f"domain={domain} or past max_groups={max_groups} "
-                            "would be dropped. Use SaturationPolicy.GROW or "
-                            "declare a larger key_domain/max_groups."
-                        )
-                    # GROW: the domain must cover the largest observed key
-                    # VALUE.  Direct allocates O(domain) arrays, so keep the
-                    # same rows-bound as every other grow — keys far sparser
-                    # than the row count mean direct is the wrong ticketing.
-                    kmax = int(jax.device_get(
-                        jnp.max(jnp.where(valid, keys, jnp.uint32(0)))
-                    ))
-                    bound = max(4 * self._rows, 65536)
-                    if kmax + 1 > bound:
-                        raise GroupByOverflowError(
-                            f"direct-ticketing overflow: observed key {kmax} "
-                            f"needs domain {kmax + 1}, past the rows-bounded "
-                            f"growth limit {bound} — the key space is too "
-                            "sparse for perfect-hash ticketing; use "
-                            "ticketing='hash' instead."
-                        )
-                    domain = max(kmax + 1, domain)
-                    max_groups = max(domain, 64)
-                    tickets, kbt, count = tk.direct_ticketing(keys, domain)
-                # checked reads promise count ≤ materialized rows (legacy
-                # unchecked keeps the raw static-domain count)
-                count = jnp.minimum(count, max_groups)
-        update_fn = up.get_update_fn(ex.update or "scatter")
-        state = up.init_agg_state(expand_agg_specs(p.aggs), max_groups)
-        state = up.update_agg_state(state, tickets, vals, update_fn)
-        return build_result_table(p.aggs, state.get, kbt, count, max_groups)
+        p = self._plan
+        if self._state is None:
+            raise ValueError("GroupByPlan executed over zero chunks")
+        domain, max_groups = self._domain, self._bound
+        _, kbt, count = tk.direct_ticketing(
+            jnp.zeros((0,), jnp.uint32), domain
+        )
+        if p.saturation == SaturationPolicy.RAISE:
+            dropped, used = jax.device_get((self._dropped, self._max_ticket + 1))
+            if bool(dropped) or int(used) > max_groups:
+                raise GroupByOverflowError(
+                    "direct-ticketing overflow: keys outside "
+                    f"domain={domain} or past max_groups={max_groups} "
+                    "would be dropped. Use SaturationPolicy.GROW or "
+                    "declare a larger key_domain/max_groups."
+                )
+        if p.saturation != SaturationPolicy.UNCHECKED:
+            # checked reads promise count ≤ materialized rows (legacy
+            # unchecked keeps the raw static-domain count)
+            count = jnp.minimum(count, max_groups)
+        return build_result_table(p.aggs, self._state.get, kbt, count, max_groups)
 
 
 # ---------------------------------------------------------------------------
@@ -858,7 +1078,8 @@ class _ShardedExecutor(_ExecutorBase):
 
     def __init__(self, plan: GroupByPlan):
         self._plan = plan
-        self._agg = _single_agg(plan, "sharded")
+        self._specs = expand_agg_specs(plan.aggs)
+        self._vcols = tuple(sorted({c for c, _ in self._specs if c is not None}))
         ex = plan.execution
         if ex.mesh is None:
             raise ValueError("strategy 'sharded' requires ExecutionPolicy.mesh")
@@ -872,6 +1093,7 @@ class _ShardedExecutor(_ExecutorBase):
         self._step = None
         self._rows = 0
         self.raw = None
+        self._merged = None
 
     def _ensure_state(self):
         from repro.core import distributed as dist
@@ -879,19 +1101,21 @@ class _ShardedExecutor(_ExecutorBase):
         ex = self._plan.execution
         if self._carry is None:
             self._carry = dist.make_sharded_carry(
-                self._ndev, self._max_local, self._agg.kind,
+                self._ndev, self._max_local, self._specs,
                 capacity=table_capacity(self._max_local, ex.load_factor),
             )
         if self._step is None:
             self._step = dist.make_sharded_consume_step(
-                ex.mesh, ex.axis, kind=self._agg.kind,
+                ex.mesh, ex.axis,
                 update=ex.update or "scatter", load_factor=ex.load_factor,
                 checked=self._checked,
             )
 
-    def _morselize(self, keys, v):
+    def _morselize(self, keys, vals):
         """Split a chunk's rows contiguously over the mesh axis and each
-        device's slice into morsels: (ndev, num_morsels, morsel_rows)."""
+        device's slice into morsels: keys (ndev, num_morsels, morsel_rows)
+        plus one value plane per aggregated column (padding rows carry
+        EMPTY_KEY, so their zero values park in ``updates._masked``)."""
         ex = self._plan.execution
         n = int(keys.shape[0])
         per_dev = -(-n // self._ndev)
@@ -902,10 +1126,13 @@ class _ShardedExecutor(_ExecutorBase):
             keys = jnp.concatenate(
                 [keys, jnp.full((total - n,), EMPTY_KEY, jnp.uint32)]
             )
-            v = jnp.concatenate([v, jnp.zeros((total - n,), jnp.float32)])
+            vals = {
+                c: jnp.concatenate([v, jnp.zeros((total - n,), jnp.float32)])
+                for c, v in vals.items()
+            }
         return (
             keys.reshape(self._ndev, per_dev // m, m),
-            v.reshape(self._ndev, per_dev // m, m),
+            {c: v.reshape(self._ndev, per_dev // m, m) for c, v in vals.items()},
         )
 
     def consume(self, chunk: Table) -> None:
@@ -913,11 +1140,10 @@ class _ShardedExecutor(_ExecutorBase):
 
     def consume_async(self, chunk: Table):
         keys, vals = _chunk_keys_values(self._plan, chunk)
-        v = (vals[self._agg.column] if self._agg.column
-             else jnp.ones(keys.shape, jnp.float32))
+        vals = {c: vals[c] for c in self._vcols}
         self._rows += int(keys.shape[0])
         self._ensure_state()
-        km, vm = self._morselize(keys, v)
+        km, vm = self._morselize(keys, vals)
         start = jnp.zeros((self._ndev,), jnp.int32)
         self._carry, halts = self._step(self._carry, km, vm, start)
         return (km, vm, halts) if self._checked else None
@@ -955,7 +1181,7 @@ class _ShardedExecutor(_ExecutorBase):
                 # else: an earlier token's poll already grew — just replay
             if (new_maxl, new_cap) != (self._max_local, self._carry.capacity):
                 self._carry = dist.grow_sharded_carry(
-                    self._carry, new_maxl, new_cap, self._agg.kind
+                    self._carry, new_maxl, new_cap
                 )
                 self._max_local = new_maxl
             replayed = firsts
@@ -978,16 +1204,23 @@ class _ShardedExecutor(_ExecutorBase):
         p, ex = self._plan, self._plan.execution
         max_groups = self._max_groups
         if ex.shard_merge == "dense_psum":
+            from repro.core.aggregation import GroupByResult
+
             while True:
-                res, lovf, union_ovf = dist.sharded_psum_merge(
-                    ex.mesh, ex.axis, self._carry,
-                    kind=self._agg.kind, max_groups=max_groups,
+                kbt, gstate, count, lovf, union_ovf = dist.sharded_psum_merge(
+                    ex.mesh, ex.axis, self._carry, max_groups=max_groups,
                 )
-                self.raw = res
+                self._merged = (kbt, gstate, count)
+                spec = self._specs[0]
+                # legacy per-device view: single-spec plans keep the
+                # GroupByResult raw layout the adapters/tests read
+                self.raw = GroupByResult(
+                    kbt, up.finalize(spec[1], gstate.accs[0]), count,
+                ) if len(self._specs) == 1 else (kbt, gstate, count)
                 if p.saturation == SaturationPolicy.UNCHECKED:
-                    return max_groups, res.num_groups
+                    return max_groups, count
                 lost, uovf, issued = (int(x) for x in jax.device_get(
-                    (lovf, union_ovf, res.num_groups)
+                    (lovf, union_ovf, count)
                 ))
                 if lost > 0:
                     # keys dropped at a device BEFORE the union — only
@@ -1001,7 +1234,7 @@ class _ShardedExecutor(_ExecutorBase):
                     )
                 if uovf == 0 and issued <= max_groups:
                     self._max_groups = max_groups
-                    return max_groups, res.num_groups
+                    return max_groups, count
                 if p.saturation == SaturationPolicy.RAISE or max_groups >= self._rows:
                     raise _overflow_error(issued, max_groups)
                 # GROW at the union: re-merge over the carried state with a
@@ -1015,11 +1248,18 @@ class _ShardedExecutor(_ExecutorBase):
             while True:
                 keys_p, vals_p, counts_p, overflow_p, lovf = (
                     dist.sharded_exchange_merge(
-                        ex.mesh, ex.axis, self._carry, kind=self._agg.kind,
+                        ex.mesh, ex.axis, self._carry,
                         max_groups=max_groups, partition_capacity=pc,
                     )
                 )
-                self.raw = (keys_p, vals_p, counts_p, overflow_p)
+                self._merged = (keys_p, vals_p, counts_p)
+                # legacy per-device view: single-spec plans keep the flat
+                # finalized vals vector the adapters/tests read
+                legacy_vals = (
+                    up.finalize(self._specs[0][1], vals_p[0])
+                    if len(self._specs) == 1 else vals_p
+                )
+                self.raw = (keys_p, legacy_vals, counts_p, overflow_p)
                 count = jnp.sum(counts_p)
                 if p.saturation == SaturationPolicy.UNCHECKED:
                     return max_groups, count
@@ -1058,21 +1298,26 @@ class _ShardedExecutor(_ExecutorBase):
     def finalize(self) -> Table:
         max_groups, count = self.finalize_raw()
         if self._plan.execution.shard_merge == "dense_psum":
-            kbt, acc = self.raw.keys, self.raw.values
+            kbt, gstate, _ = self._merged
+            get = gstate.get
         else:
             # Unify the per-partition outputs: stable compaction of each
             # owner's valid prefix (partitions are disjoint, so the keys
             # are globally unique).  Pure jnp — no host round-trip.
-            keys_p, vals_p, counts_p, _ = self.raw
+            keys_p, vals_p, counts_p = self._merged
             ndev = self._ndev
             per_dev = keys_p.shape[0] // ndev
             idx = jnp.arange(keys_p.shape[0])
             valid = (idx % per_dev) < jnp.take(counts_p.reshape(-1), idx // per_dev)
             order = jnp.argsort(~valid, stable=True)
             kbt = jnp.take(keys_p.reshape(-1), order)[:max_groups]
-            acc = jnp.take(vals_p.reshape(-1), order)[:max_groups]
+            accs = {
+                spec: jnp.take(v.reshape(-1), order)[:max_groups]
+                for spec, v in zip(self._specs, vals_p)
+            }
+            get = lambda c, k: accs[(c, k)]
         return build_result_table(
-            self._plan.aggs, lambda c, k: acc, kbt, count, max_groups,
+            self._plan.aggs, get, kbt, count, max_groups,
         )
 
 
@@ -1188,4 +1433,10 @@ class _BufferedShardedExecutor(_BufferedExecutor):
         )
 
 
-__all__ = ["make_executor", "resolve_plan", "resolve_plan_stats"]
+__all__ = [
+    "batch_signature",
+    "consume_batched",
+    "make_executor",
+    "resolve_plan",
+    "resolve_plan_stats",
+]

@@ -96,7 +96,7 @@ class ExecutionPolicy:
     key_domain: int | None = None     # direct ticketing: bounded key domain
     # streaming ingest
     prefetch: int = 2                 # in-flight chunks before the oldest poll
-    sharded_ingest: str = "stream"    # stream (carried state) | buffered (PR-2 A/B)
+    sharded_ingest: str = "stream"    # stream (carried state) | buffered (DEPRECATED)
     # pallas strategy
     morsel_size: int = 1024           # kernel grid morsel
     interpret: bool | None = None     # None → auto (False on TPU)
@@ -219,6 +219,15 @@ class StreamHandle:
     groups seen so far materialize without disturbing consumption.
     ``result()`` drains the source and returns the terminal table (further
     pumping raises).
+
+    A handle is also a ``SlotTask`` (serve/scheduler.py): ``step()`` pumps
+    one chunk, ``done`` flips when the source exhausts, ``finish()`` is
+    ``result()`` and ``cancel()`` releases the executor's carried state —
+    which is what lets ``serve/query_server.AggregationServer`` multiplex
+    many live streams over shared devices.  ``pull_chunk()`` exposes the
+    source side alone (no executor dispatch) for the server's batched
+    dispatch, which folds chunks from several same-shape handles into one
+    device launch.
     """
 
     def __init__(self, executor, chunks: Iterator[Table], prefetch: int = 2):
@@ -229,6 +238,8 @@ class StreamHandle:
         self._result: Table | None = None
         self.chunks_consumed = 0
         self.rows_consumed = 0
+        self.cancelled = False
+        self._exhausted = False
 
     @property
     def closed(self) -> bool:
@@ -257,12 +268,15 @@ class StreamHandle:
         """Pull and consume up to ``max_chunks`` chunks (all remaining when
         ``None``).  Returns how many were consumed — fewer than asked means
         the source is exhausted."""
+        if self.cancelled:
+            raise ValueError("stream cancelled")
         if self.closed:
             raise ValueError("stream already finalized via result()")
         n = 0
         while max_chunks is None or n < max_chunks:
             chunk = next(self._chunks, None)
             if chunk is None:
+                self._exhausted = True
                 break
             self._dispatch(chunk)
             n += 1
@@ -273,6 +287,8 @@ class StreamHandle:
         stream: drains the in-flight window (the executor state must be
         settled), then reads the executor's idempotent finalize.  Calling
         it twice without pumping returns identical tables."""
+        if self.cancelled:
+            raise ValueError("stream cancelled")
         if self.closed:
             return self._result
         self._drain_inflight()
@@ -281,11 +297,61 @@ class StreamHandle:
     def result(self) -> Table:
         """Drain the source, settle in-flight chunks, finalize, and close
         the handle (idempotent — repeated calls return the same table)."""
+        if self.cancelled:
+            raise ValueError("stream cancelled")
         if not self.closed:
             self.pump()
             self._drain_inflight()
             self._result = self._ex.finalize()
         return self._result
+
+    # -- SlotTask face (serve/scheduler.py) ---------------------------------
+
+    @property
+    def executor(self):
+        """The live executor (the query server's batched dispatch folds
+        chunks straight into it; everyone else should pump)."""
+        return self._ex
+
+    @property
+    def done(self) -> bool:
+        """Nothing left to step: source exhausted, finalized, or cancelled."""
+        return self.closed or self.cancelled or self._exhausted
+
+    def step(self) -> bool:
+        """One scheduling quantum: pump a single chunk.  Returns False when
+        the source is exhausted (the scheduler then calls ``finish``)."""
+        if self.done:
+            return False
+        return self.pump(1) == 1
+
+    def finish(self) -> Table:
+        return self.result()
+
+    def cancel(self) -> None:
+        """Abandon the stream: drop the in-flight window, the executor (its
+        carried table/accumulator state becomes collectable — cancellation
+        must release device memory, not park it) and the source.  A
+        cancelled handle refuses pump/snapshot/result."""
+        self.cancelled = True
+        self._inflight.clear()
+        self._ex = None
+        self._chunks = iter(())
+
+    def pull_chunk(self) -> Table | None:
+        """Pull the next source chunk WITHOUT dispatching it, updating the
+        ingest counters — the batched-dispatch seam: the caller owns folding
+        the chunk into :attr:`executor` (``executors.consume_batched`` does
+        it for several handles in one device launch)."""
+        if self.cancelled or self.closed:
+            return None
+        chunk = next(self._chunks, None)
+        if chunk is None:
+            self._exhausted = True
+            return None
+        self.chunks_consumed += 1
+        self.rows_consumed += chunk.num_rows
+        return chunk
 
 
 def execute(plan: GroupByPlan, table: Table) -> Table:

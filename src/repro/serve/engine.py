@@ -7,11 +7,13 @@ parallel/sharding.cache_specs (KV-head-sharded when divisible, else
 sequence-sharded flash-decoding layout; long-context batch-1 shards the
 sequence over every mesh axis).
 
-The host-side ``ServeLoop`` implements continuous batching over request
-slots: free slots admit new requests (prefill), occupied slots decode in
-lock-step; finished requests release their slot. Straggler mitigation and
-elasticity live at this level: a re-meshed engine restores cache state from
-the previous engine's host copy.
+The host-side ``ServeLoop`` is a thin adapter over the generic slot
+scheduler (``serve/scheduler.py``): each request becomes a ``SlotTask``
+sharing one lock-step decode batch, the scheduler owns admission/stepping/
+release, and the shared-``batch_key`` group dispatch keeps the whole batch
+advancing as ONE compiled decode launch per round.  Straggler mitigation
+and elasticity live at this level: a re-meshed engine restores cache state
+from the previous engine's host copy.
 """
 from __future__ import annotations
 
@@ -83,18 +85,95 @@ class Request:
     done: bool = False
 
 
+class _DecodeTask:
+    """``SlotTask`` face of one request inside a lock-step decode batch.
+
+    All tasks of one :class:`_LockstepDecoder` share its ``batch_key``, so
+    the scheduler co-dispatches them: one ``step_batch`` call advances the
+    WHOLE batch one decode step (one compiled launch), and each task only
+    owns its request's per-slot bookkeeping (append token, notice budget
+    exhaustion, release on cancel)."""
+
+    def __init__(self, decoder: "_LockstepDecoder", row: int, request: Request):
+        self.decoder, self.row, self.request = decoder, row, request
+        self.cancelled = False
+
+    @property
+    def batch_key(self):
+        return id(self.decoder)
+
+    @property
+    def done(self) -> bool:
+        return self.request.done or self.cancelled
+
+    def step(self) -> None:
+        # lock-step: a solo step still advances the shared batch (the KV
+        # cache carries one write position — there is no per-slot clock)
+        self.decoder.tick()
+
+    @staticmethod
+    def step_batch(tasks: list["_DecodeTask"]) -> None:
+        tasks[0].decoder.tick()
+
+    def finish(self) -> Request:
+        return self.request
+
+    def cancel(self) -> None:
+        self.cancelled = True  # the decoder stops appending to this slot
+
+
+class _LockstepDecoder:
+    """Shared decode state for one admitted batch: prompts right-padded to
+    a common length and prefilled token-by-token through the SAME compiled
+    decode step generation uses (one executable, no prefill/decode
+    recompile).  Every ``tick`` appends the current greedy token to each
+    live request and runs one decode step for the whole batch."""
+
+    def __init__(self, loop: "ServeLoop", requests: list[Request]):
+        self.loop = loop
+        self.tasks = [_DecodeTask(self, i, r) for i, r in enumerate(requests)]
+        loop._reset()
+        plen = max(int(r.prompt.shape[0]) for r in requests)
+        prompts = jnp.stack(
+            [
+                jnp.pad(r.prompt, (0, plen - r.prompt.shape[0]))
+                for r in requests
+            ]
+            + [jnp.zeros((plen,), jnp.int32)] * (loop.slots - len(requests))
+        )
+        next_tok = prompts[:, :1]
+        for t in range(plen):
+            tokens = prompts[:, t : t + 1]
+            next_tok, _, loop.caches = loop.step_fn(loop.params, tokens, loop.caches)
+        self.tokens = next_tok
+
+    def tick(self) -> None:
+        for task in self.tasks:
+            if task.done:
+                continue
+            r = task.request
+            r.generated.append(int(self.tokens[task.row, 0]))
+            if len(r.generated) >= r.max_new:
+                r.done = True
+        if any(not t.done for t in self.tasks):
+            self.tokens, _, self.loop.caches = self.loop.step_fn(
+                self.loop.params, self.tokens, self.loop.caches
+            )
+
+
 class ServeLoop:
-    """Lock-step batched serving over a fixed slot grid.
+    """Lock-step batched serving over a fixed slot grid — a thin client of
+    the generic slot scheduler (``serve/scheduler.py``).
 
     All slots advance together (the KV cache carries one shared write
-    position, the standard layout for dense decode batches).  A batch of up
-    to ``slots`` requests is admitted together; prompts are right-padded to
-    a common length and prefilled token-by-token through the SAME compiled
-    decode step that generation uses (one executable, no prefill/decode
-    recompile), then decode runs until every request hit its budget.
-    Per-slot admission ("continuous batching") would need per-slot cache
-    positions — noted as future work in DESIGN.md; batch-granular admission
-    is what the serve benchmarks exercise.
+    position, the standard layout for dense decode batches), which the
+    scheduler expresses as one ``batch_key`` group: every request is its
+    own ``SlotTask``, admission/stepping/release run through
+    ``Scheduler``, and each scheduling round advances the whole batch one
+    compiled decode step.  Admission stays batch-granular (per-slot
+    admission would need per-slot cache positions — noted as future work in
+    DESIGN.md); the scheduler still buys per-request cancellation and the
+    shared fairness/accounting substrate the aggregation server uses.
     """
 
     def __init__(self, mesh, cfg: ModelConfig, params, *, slots: int, max_len: int):
@@ -110,31 +189,12 @@ class ServeLoop:
             self.step_fn = jit_serve_step(self.mesh, self.cfg, self.params, self.caches)
 
     def run_batch(self, requests: list[Request]) -> list[Request]:
+        from repro.serve.scheduler import Scheduler
+
         assert len(requests) <= self.slots
-        self._reset()
-        plen = max(int(r.prompt.shape[0]) for r in requests)
-        prompts = jnp.stack(
-            [
-                jnp.pad(r.prompt, (0, plen - r.prompt.shape[0]))
-                for r in requests
-            ]
-            + [jnp.zeros((plen,), jnp.int32)] * (self.slots - len(requests))
-        )
-        # prefill (token-at-a-time, lock-step)
-        tokens = prompts[:, :1]
-        for t in range(plen):
-            tokens = prompts[:, t : t + 1]
-            next_tok, _, self.caches = self.step_fn(self.params, tokens, self.caches)
-        tokens = next_tok
-        # decode
-        budget = max(r.max_new for r in requests)
-        for _ in range(budget):
-            for i, r in enumerate(requests):
-                if not r.done:
-                    r.generated.append(int(tokens[i, 0]))
-                    if len(r.generated) >= r.max_new:
-                        r.done = True
-            if all(r.done for r in requests):
-                break
-            tokens, _, self.caches = self.step_fn(self.params, tokens, self.caches)
+        sched = Scheduler(slots=self.slots)
+        decoder = _LockstepDecoder(self, requests)
+        for task, r in zip(decoder.tasks, requests):
+            sched.submit(task, tenant=f"req-{r.uid}")
+        sched.run_until_idle()
         return requests

@@ -1,0 +1,221 @@
+"""Multi-tenant aggregation serving: many concurrent GROUP BY streams,
+one scheduler, shared devices.
+
+``AggregationServer`` is the query-side client of the generic slot
+scheduler (``serve/scheduler.py``) — the production layer the paper's
+"millions of users" claim needs: admit many streaming GROUP BY queries,
+step them fairly across tenants, batch same-shape queries into one device
+dispatch, and enforce per-tenant capacity budgets.
+
+    server = AggregationServer(slots=8)
+    h1 = server.submit(plan, source_a, tenant="alice")
+    h2 = server.submit(plan, source_b, tenant="bob")
+    partial = h1.snapshot()       # incremental per-query read, mid-stream
+    out1 = h1.result()            # drives the scheduler (fairly) to h1's end
+    h2.cancel()                   # frees the slot; queued queries admit
+
+Each submitted query is a ``GroupByPlan.stream()`` handle wearing its
+``SlotTask`` face: one scheduling quantum = one source chunk through the
+executor.  Queries whose plans share a ``batch_signature``
+(engine/executors.py) advertise it as their ``batch_key``, so the scheduler
+steps the whole group through ONE fused device dispatch
+(``consume_batched``) — N concurrent small queries cost one launch per
+chunk instead of N (bench_serve.py measures the speedup).
+
+Budgets ride the existing ``SaturationPolicy`` seam: a tenant with
+``max_groups=B`` gets every plan capped at B **with saturation forced to
+RAISE** — a budget is a hard capacity contract, so the offending query
+fails with ``GroupByOverflowError`` at its finalize while every other
+query keeps running (the scheduler isolates task failures per slot).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+from repro.engine.plan_api import GroupByPlan, SaturationPolicy, StreamHandle
+from repro.serve.scheduler import (
+    CANCELLED,
+    DONE,
+    FAILED,
+    Scheduler,
+    SlotHandle,
+    TenantBudget,
+)
+
+
+@dataclass
+class _QueryTask:
+    """``SlotTask`` over a :class:`StreamHandle`, plus the batched-dispatch
+    group key.  Solo stepping pumps through the handle's prefetch window;
+    group stepping pulls one chunk per live handle and folds them all in
+    one device launch."""
+
+    handle: StreamHandle
+    batch_key: Any = None
+
+    @property
+    def done(self) -> bool:
+        return self.handle.done
+
+    def step(self) -> None:
+        self.handle.step()
+
+    @staticmethod
+    def step_batch(tasks: list["_QueryTask"]) -> None:
+        from repro.engine.executors import consume_batched
+
+        pairs = []
+        for t in tasks:
+            if t.done:
+                continue
+            chunk = t.handle.pull_chunk()
+            if chunk is not None:
+                pairs.append((t, chunk))
+        if not pairs:
+            return
+        if len(pairs) == 1:
+            t, chunk = pairs[0]
+            t.handle.executor.consume(chunk)
+            return
+        consume_batched(
+            [t.handle.executor for t, _ in pairs],
+            [chunk for _, chunk in pairs],
+        )
+
+    def finish(self):
+        return self.handle.finish()
+
+    def cancel(self) -> None:
+        self.handle.cancel()
+
+
+class QueryHandle:
+    """One live (or finished) query on the server."""
+
+    def __init__(self, server: "AggregationServer", slot: SlotHandle,
+                 stream: StreamHandle):
+        self._server = server
+        self._slot = slot
+        self._stream = stream
+
+    @property
+    def tenant(self) -> str:
+        return self._slot.tenant
+
+    @property
+    def status(self) -> str:
+        return self._slot.status
+
+    @property
+    def done(self) -> bool:
+        return self._slot.terminal
+
+    @property
+    def error(self) -> BaseException | None:
+        return self._slot.error
+
+    @property
+    def slot(self) -> int | None:
+        return self._slot.slot
+
+    @property
+    def chunks_consumed(self) -> int:
+        return self._stream.chunks_consumed
+
+    def snapshot(self):
+        """Incremental per-query read: the groups this query has aggregated
+        so far, without disturbing its stream (idempotent executor
+        finalize).  On a finished query this is simply its result."""
+        if self._slot.status == DONE:
+            return self._slot.value
+        if self._slot.status in (FAILED, CANCELLED):
+            return self._slot.result()  # raises the stored error
+        return self._stream.snapshot()
+
+    def result(self):
+        """Drive the scheduler — fairly, every tenant keeps advancing —
+        until THIS query is terminal; return its table or raise its
+        error."""
+        if not self._slot.terminal:
+            self._server.scheduler.drive(self._slot)
+        return self._slot.result()
+
+    def cancel(self) -> None:
+        """Cancel the query: its executor state is released and its slot is
+        immediately free for the next queued admission."""
+        self._server.scheduler.cancel(self._slot)
+
+
+class AggregationServer:
+    """Multiplex concurrent GROUP BY streams over shared devices."""
+
+    def __init__(self, *, slots: int = 8, batch_queries: bool = True):
+        self.scheduler = Scheduler(slots=slots)
+        self.batch_queries = batch_queries
+
+    # -- tenants ------------------------------------------------------------
+
+    def set_budget(self, tenant: str, *, max_groups: int | None = None,
+                   weight: int = 1, max_steps: int | None = None) -> None:
+        """Per-tenant contract: ``weight`` quanta per round-robin turn,
+        ``max_steps`` hard scheduling budget, ``max_groups`` hard per-query
+        cardinality cap (enforced through ``SaturationPolicy.RAISE``)."""
+        self.scheduler.set_budget(
+            tenant,
+            TenantBudget(weight=weight, max_steps=max_steps, max_groups=max_groups),
+        )
+
+    def tenant_stats(self, tenant: str) -> dict:
+        return self.scheduler.tenant_stats(tenant)
+
+    # -- queries ------------------------------------------------------------
+
+    def _apply_budget(self, plan: GroupByPlan, tenant: str) -> GroupByPlan:
+        budget = self.scheduler.budget(tenant)
+        if budget is None or budget.max_groups is None:
+            return plan
+        capped = (
+            budget.max_groups if plan.max_groups is None
+            else min(plan.max_groups, budget.max_groups)
+        )
+        # A budget is a hard per-tenant contract: the capped plan must
+        # surface saturation, not silently grow past it or truncate.
+        return plan.with_(max_groups=capped, saturation=SaturationPolicy.RAISE)
+
+    def submit(self, plan: GroupByPlan, source, *, tenant: str = "default",
+               prefetch: int | None = None) -> QueryHandle:
+        """Admit a streaming GROUP BY: free slot → runs on the next
+        scheduling round; otherwise queued until a slot frees.  Nothing is
+        consumed from ``source`` until the query is stepped."""
+        from repro.engine.executors import batch_signature
+
+        plan = self._apply_budget(plan, tenant)
+        sig = batch_signature(plan) if self.batch_queries else None
+        stream = plan.stream(source, prefetch=prefetch)
+        task = _QueryTask(stream, batch_key=sig)
+        slot = self.scheduler.submit(task, tenant=tenant)
+        return QueryHandle(self, slot, stream)
+
+    # -- driving ------------------------------------------------------------
+
+    def step(self, rounds: int = 1) -> int:
+        """Run up to ``rounds`` scheduling rounds; returns tasks stepped."""
+        total = 0
+        for _ in range(rounds):
+            n = self.scheduler.step()
+            if n == 0:
+                break
+            total += n
+        return total
+
+    def run_until_idle(self) -> int:
+        """Drive every submitted query to a terminal state."""
+        return self.scheduler.run_until_idle()
+
+    @property
+    def idle(self) -> bool:
+        return self.scheduler.idle
+
+
+__all__ = ["AggregationServer", "QueryHandle"]

@@ -1,0 +1,265 @@
+"""Scheduler + aggregation-server tests: deficit round-robin fairness under
+unequal stream lengths, cancellation freeing and reusing slots, per-tenant
+saturation budgets failing only the offending query, and batched dispatch
+producing bit-identical per-query results."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.data.pipeline import ArraySource
+from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy
+from repro.engine.groupby import GroupByOverflowError
+from repro.serve.query_server import AggregationServer
+from repro.serve.scheduler import (
+    BudgetExceededError,
+    Scheduler,
+    TaskCancelledError,
+    TenantBudget,
+)
+
+RNG = np.random.default_rng(29)
+N = 4096
+CHUNK = 512
+
+
+class FakeTask:
+    """Deterministic SlotTask: ``length`` quanta, records every step."""
+
+    def __init__(self, length, batch_key=None, log=None, name=""):
+        self.length = length
+        self.steps = 0
+        self.batch_key = batch_key
+        self.log = log if log is not None else []
+        self.name = name
+        self.cancelled = False
+
+    @property
+    def done(self):
+        return self.steps >= self.length
+
+    def step(self):
+        self.steps += 1
+        self.log.append(self.name)
+
+    @staticmethod
+    def step_batch(tasks):
+        for t in tasks:
+            t.step()
+
+    def finish(self):
+        return self.name
+
+    def cancel(self):
+        self.cancelled = True
+
+
+# ---------------------------------------------------------------------------
+# scheduler core
+
+
+def test_fairness_unequal_stream_lengths_no_starvation():
+    """A 4-quantum tenant sharing two slots with a 32-quantum tenant must
+    finish in ~2×4 rounds (strict alternation), not wait for the long
+    stream to drain."""
+    sched = Scheduler(slots=2)
+    log = []
+    short = sched.submit(FakeTask(4, log=log, name="short"), tenant="a")
+    long = sched.submit(FakeTask(32, log=log, name="long"), tenant="b")
+    rounds = 0
+    while not short.terminal:
+        sched.step()
+        rounds += 1
+    assert short.result() == "short"
+    assert rounds <= 9  # strict alternation: short done by round 8
+    # while both ran, neither tenant got ahead by more than one quantum
+    assert abs(log[:8].count("short") - log[:8].count("long")) <= 1
+    sched.run_until_idle()
+    assert long.result() == "long"
+    assert sched.tenant_stats("b")["steps"] == 32
+
+
+def test_fairness_weight_gives_proportional_quanta():
+    sched = Scheduler(slots=2)
+    sched.set_budget("heavy", TenantBudget(weight=3))
+    log = []
+    sched.submit(FakeTask(30, log=log, name="h"), tenant="heavy")
+    sched.submit(FakeTask(30, log=log, name="l"), tenant="light")
+    for _ in range(16):
+        sched.step()
+    # deficit RR: 3 quanta for heavy per 1 for light
+    assert log[:8] == ["h", "h", "h", "l", "h", "h", "h", "l"]
+
+
+def test_cancellation_frees_slot_and_next_admission_reuses_it():
+    sched = Scheduler(slots=1)
+    first = sched.submit(FakeTask(100), tenant="a")
+    second = sched.submit(FakeTask(3), tenant="b")
+    sched.step()
+    assert first.slot == 0 and second.status == "queued"
+    sched.cancel(first)
+    assert first.status == "cancelled"
+    assert first.task.cancelled  # task released its state
+    assert second.slot == 0  # admitted into the freed slot immediately
+    sched.run_until_idle()
+    assert second.result() == ""
+    with pytest.raises(TaskCancelledError):
+        first.result()
+
+
+def test_tenant_max_steps_budget_fails_only_that_tenant():
+    sched = Scheduler(slots=2)
+    sched.set_budget("capped", TenantBudget(max_steps=5))
+    capped = sched.submit(FakeTask(50), tenant="capped")
+    free = sched.submit(FakeTask(12), tenant="free")
+    sched.run_until_idle()
+    assert capped.status == "failed"
+    with pytest.raises(BudgetExceededError):
+        capped.result()
+    assert free.status == "done"
+    assert free.task.steps == 12
+
+
+def test_batch_key_groups_step_in_one_dispatch():
+    calls = []
+
+    class Batchy(FakeTask):
+        @staticmethod
+        def step_batch(tasks):
+            calls.append(len(tasks))
+            for t in tasks:
+                t.step()
+
+    sched = Scheduler(slots=4)
+    handles = [
+        sched.submit(Batchy(3, batch_key="g"), tenant=f"t{i}") for i in range(4)
+    ]
+    sched.run_until_idle()
+    assert all(h.status == "done" for h in handles)
+    assert calls == [4, 4, 4]  # 3 rounds, whole group per dispatch
+
+
+def test_failure_isolated_to_one_slot():
+    class Exploding(FakeTask):
+        def step(self):
+            raise RuntimeError("boom")
+
+    sched = Scheduler(slots=2)
+    bad = sched.submit(Exploding(5), tenant="bad")
+    good = sched.submit(FakeTask(4), tenant="good")
+    sched.run_until_idle()
+    assert bad.status == "failed" and good.status == "done"
+    with pytest.raises(RuntimeError, match="boom"):
+        bad.result()
+
+
+# ---------------------------------------------------------------------------
+# aggregation server over real GROUP BY streams
+
+
+def _cols(seed, n=N, card=200):
+    r = np.random.default_rng(seed)
+    return {
+        "k": jnp.asarray(r.integers(0, card, size=n).astype(np.uint32)),
+        "v": jnp.asarray(r.standard_normal(n).astype(np.float32)),
+    }
+
+
+def _plan(**kw):
+    base = dict(
+        keys=("k",), aggs=(AggSpec("sum", "v"), AggSpec("count")),
+        strategy="concurrent", max_groups=512,
+        saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
+        execution=ExecutionPolicy(update="scatter", morsel_rows=256),
+    )
+    base.update(kw)
+    return GroupByPlan(**base)
+
+
+def test_batched_dispatch_bit_identical_to_sequential_collect():
+    plan = _plan()
+    cols = [_cols(i) for i in range(6)]
+    sequential = [plan.collect(ArraySource(c, chunk_rows=CHUNK)) for c in cols]
+
+    server = AggregationServer(slots=6, batch_queries=True)
+    handles = [server.submit(plan, ArraySource(c, chunk_rows=CHUNK)) for c in cols]
+    server.run_until_idle()
+    for h, want in zip(handles, sequential):
+        got = h.result()
+        for col in want.columns:
+            np.testing.assert_array_equal(
+                np.asarray(got[col]), np.asarray(want[col]), err_msg=col
+            )
+
+
+def test_server_cancellation_mid_stream_frees_slot_for_queued_query():
+    plan = _plan()
+    server = AggregationServer(slots=1)
+    h1 = server.submit(plan, ArraySource(_cols(0), chunk_rows=CHUNK), tenant="a")
+    h2 = server.submit(plan, ArraySource(_cols(1), chunk_rows=CHUNK), tenant="b")
+    server.step(2)  # h1 mid-stream, h2 still queued behind the single slot
+    assert h1.chunks_consumed > 0 and h2.status == "queued"
+    h1.cancel()
+    assert h1.status == "cancelled" and h2.slot == 0
+    server.run_until_idle()
+    want = plan.collect(ArraySource(_cols(1), chunk_rows=CHUNK))
+    got = h2.result()
+    np.testing.assert_array_equal(
+        np.asarray(got["sum(v)"]), np.asarray(want["sum(v)"])
+    )
+    with pytest.raises(TaskCancelledError):
+        h1.result()
+
+
+def test_tenant_max_groups_budget_fails_only_offending_query():
+    server = AggregationServer(slots=2)
+    server.set_budget("small", max_groups=64)
+    over = server.submit(
+        _plan(max_groups=None, strategy="concurrent"),
+        ArraySource(_cols(9, card=500), chunk_rows=CHUNK), tenant="small",
+    )
+    fine = server.submit(
+        _plan(), ArraySource(_cols(2), chunk_rows=CHUNK), tenant="other",
+    )
+    server.run_until_idle()
+    assert over.status == "failed"
+    assert isinstance(over.error, GroupByOverflowError)
+    with pytest.raises(GroupByOverflowError):
+        over.result()
+    assert fine.status == "done"
+    n = int(fine.result()["__num_groups__"][0])
+    assert n == 200
+
+
+def test_server_fairness_short_query_not_starved_by_long_stream():
+    plan = _plan()
+    server = AggregationServer(slots=2, batch_queries=False)
+    short = server.submit(
+        plan, ArraySource(_cols(0, n=2 * CHUNK), chunk_rows=CHUNK), tenant="a"
+    )
+    long = server.submit(
+        plan, ArraySource(_cols(1, n=16 * CHUNK), chunk_rows=CHUNK), tenant="b"
+    )
+    out = short.result()  # drives fairly until the short query completes
+    assert short.done and not long.done
+    # strict alternation: the long stream advanced about as far as the short
+    assert 1 <= long.chunks_consumed <= short.chunks_consumed + 2
+    want = plan.collect(ArraySource(_cols(0, n=2 * CHUNK), chunk_rows=CHUNK))
+    np.testing.assert_array_equal(
+        np.asarray(out["sum(v)"]), np.asarray(want["sum(v)"])
+    )
+    server.run_until_idle()
+    assert long.done
+
+
+def test_mid_stream_snapshot_per_query():
+    plan = _plan()
+    server = AggregationServer(slots=2)
+    h = server.submit(plan, ArraySource(_cols(4), chunk_rows=CHUNK))
+    server.step(3)
+    snap = h.snapshot()
+    assert int(snap["__num_groups__"][0]) > 0
+    server.run_until_idle()
+    final = h.snapshot()  # snapshot of a finished query IS its result
+    np.testing.assert_array_equal(
+        np.asarray(final["sum(v)"]), np.asarray(h.result()["sum(v)"])
+    )

@@ -220,6 +220,144 @@ def test_sort_ticketing_is_oneshot_and_buffers():
 
 
 # ---------------------------------------------------------------------------
+# direct ticketing streams (ticket == key over a bounded domain)
+
+
+def test_direct_ticketing_streams_without_buffering():
+    """Direct ticketing consumes chunk-by-chunk with NO retained chunks:
+    tickets are stable across the whole stream (ticket == key), so the
+    accumulator carries and every chunk is dropped after its scatter."""
+    keys = np.concatenate(
+        [np.arange(300, dtype=np.uint32),
+         RNG.integers(0, 300, size=N - 300).astype(np.uint32)]
+    )
+    RNG.shuffle(keys)
+    vals = RNG.normal(size=N).astype(np.float32)
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("count"), AggSpec("sum", "v")),
+        strategy="concurrent", max_groups=512,
+        saturation=SaturationPolicy.RAISE, raw_keys=True,
+        execution=ExecutionPolicy(ticketing="direct", key_domain=300),
+    )
+    handle = plan.stream(chunk_tables(keys, vals))
+    out = handle.result()
+    assert handle.peak_buffered_chunks == 0  # was 8 before the refactor
+    assert handle.chunks_consumed == 8
+    assert table_map(out, "count(*)") == oracle_map(keys, None, kind="count")
+    assert table_map(out, "sum(v)") == pytest.approx(
+        oracle_map(keys, vals), abs=1e-3
+    )
+
+
+def test_direct_ticketing_grows_domain_midstream():
+    """Keys past the planned domain arrive only in later chunks; GROW
+    widens the domain and the accumulators in-stream without replay."""
+    early = RNG.integers(0, 64, size=N // 2).astype(np.uint32)
+    late = RNG.integers(0, 500, size=N // 2).astype(np.uint32)
+    keys = np.concatenate([early, late])
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("count"),), strategy="concurrent",
+        max_groups=64, saturation=SaturationPolicy.GROW, raw_keys=True,
+        execution=ExecutionPolicy(ticketing="direct"),
+    )
+    handle = plan.stream(chunk_tables(keys))
+    out = handle.result()
+    assert handle.peak_buffered_chunks == 0
+    n = int(out["__num_groups__"][0])
+    want = np.bincount(keys, minlength=n).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(out["count(*)"])[:n], want[:n])
+    np.testing.assert_array_equal(np.asarray(out["key"])[:n], np.arange(n))
+
+
+def test_direct_ticketing_raise_on_stream_overflow():
+    keys = RNG.integers(0, 500, size=N).astype(np.uint32)
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("count"),), strategy="concurrent",
+        max_groups=64, saturation=SaturationPolicy.RAISE, raw_keys=True,
+        execution=ExecutionPolicy(ticketing="direct"),
+    )
+    from repro.engine import GroupByOverflowError
+
+    with pytest.raises(GroupByOverflowError, match="direct-ticketing overflow"):
+        plan.collect(chunk_tables(keys))
+
+
+# ---------------------------------------------------------------------------
+# sharded streams: full AggState carries → multi-aggregate / mean
+
+
+@pytest.mark.parametrize("merge", ["dense_psum", "all_to_all"])
+def test_sharded_stream_multi_aggregate(merge):
+    """The sharded carry holds a full AggState pytree, so a sharded stream
+    accepts multiple aggregates (incl. composed mean) like every other
+    strategy — previously it was limited to one accumulator."""
+    import jax
+
+    keys = gen_keys("uniform")
+    vals = RNG.normal(size=N).astype(np.float32)
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = GroupByPlan(
+        keys=("k",),
+        aggs=(AggSpec("sum", "v"), AggSpec("mean", "v"),
+              AggSpec("count"), AggSpec("min", "v")),
+        strategy="sharded", max_groups=512,
+        saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
+        execution=ExecutionPolicy(mesh=mesh, axis="data", shard_merge=merge),
+    )
+    handle = plan.stream(chunk_tables(keys, vals))
+    out = handle.result()
+    assert handle.peak_buffered_chunks == 0
+    sums = oracle_map(keys, vals, kind="sum")
+    counts = oracle_map(keys, None, kind="count")
+    assert table_map(out, "count(*)") == counts
+    assert table_map(out, "sum(v)") == pytest.approx(sums, abs=1e-3)
+    assert table_map(out, "min(v)") == pytest.approx(
+        oracle_map(keys, vals, kind="min"), abs=1e-5
+    )
+    assert table_map(out, "mean(v)") == pytest.approx(
+        {k: sums[k] / counts[k] for k in sums}, abs=1e-4
+    )
+
+
+def test_sharded_stream_multi_aggregate_grow():
+    import jax
+
+    keys = RNG.integers(0, 700, size=N).astype(np.uint32)
+    vals = RNG.normal(size=N).astype(np.float32)
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("mean", "v"), AggSpec("count")),
+        strategy="sharded", max_groups=64,
+        saturation=SaturationPolicy.GROW, raw_keys=True,
+        execution=ExecutionPolicy(mesh=mesh, axis="data"),
+    )
+    out = plan.collect(chunk_tables(keys, vals))
+    sums = oracle_map(keys, vals, kind="sum")
+    counts = oracle_map(keys, None, kind="count")
+    assert table_map(out, "count(*)") == counts
+    assert table_map(out, "mean(v)") == pytest.approx(
+        {k: sums[k] / counts[k] for k in sums}, abs=1e-4
+    )
+
+
+def test_sharded_buffered_ingest_is_deprecated():
+    import jax
+
+    keys = gen_keys("uniform")
+    mesh = jax.make_mesh((1,), ("data",))
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("count"),), strategy="sharded",
+        max_groups=512, saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
+        execution=ExecutionPolicy(mesh=mesh, axis="data",
+                                  sharded_ingest="buffered"),
+    )
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        handle = plan.stream(chunk_tables(keys))
+    out = handle.result()
+    assert table_map(out, "count(*)") == oracle_map(keys, None, kind="count")
+
+
+# ---------------------------------------------------------------------------
 # ChunkSource adapters
 
 
