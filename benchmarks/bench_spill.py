@@ -1,0 +1,173 @@
+"""Out-of-core spill benchmark — the spill subsystem's acceptance gates.
+
+A cardinality sweep (1×, 10×, and — outside quick mode — 100× the device
+residency budget) over the same chunked stream, every configuration running
+``saturation="spill"`` with the SAME ``max_groups`` budget:
+
+  * ``exact`` — the spilled result is bit-identical to ``groupby_oracle``
+    COUNT/SUM (integer-valued f32 values, so summation order can't hide a
+    wrong merge) at every cardinality;
+  * ``gate`` — at 10× cardinality, peak device table bytes (hot ticket
+    table + the largest second-pass partition table, measured by the
+    executor) stay ≤ 2× the residency budget's table bytes.  Partitions
+    are sized so per-partition cardinality ≤ budget, the documented
+    condition for the bound;
+  * flat-memory evidence — device table bytes are emitted per cardinality:
+    they stay constant while true cardinality grows 10–100×, the
+    out-of-core claim in one row;
+  * ``overhead`` — the spilling run vs a plain concurrent run given enough
+    ``max_groups`` to never spill (the "just buy more memory" baseline).
+
+Emits ``common.emit`` CSV; ``--json PATH`` writes the raw numbers
+(CI uploads ``BENCH_spill.json`` per PR, next to ``BENCH_stream.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import N_ROWS, emit, time_fn
+from repro.core import groupby_oracle
+from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy, Table
+
+BUDGET = 1024  # device residency budget (max_groups under saturation="spill")
+CHUNKS = 16
+
+
+def _data(n: int, card: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, card, size=n).astype(np.uint32)
+    # integer-valued f32: any summation order is exact below 2**24
+    vals = rng.integers(0, 100, size=n).astype(np.float32)
+    return keys, vals
+
+
+def _chunked(keys, vals, chunks=CHUNKS):
+    step = keys.shape[0] // chunks
+    for i in range(0, keys.shape[0], step):
+        yield Table({"k": jnp.asarray(keys[i:i + step]),
+                     "v": jnp.asarray(vals[i:i + step])})
+
+
+def _result_maps(out):
+    n = int(out["__num_groups__"][0])
+    keys = np.asarray(out["key"])[:n]
+    return (
+        dict(zip(keys.tolist(), np.asarray(out["count(*)"])[:n].tolist())),
+        dict(zip(keys.tolist(), np.asarray(out["sum(v)"])[:n].tolist())),
+    )
+
+
+def _oracle_maps(keys, vals, card):
+    out = {}
+    for kind, v in (("count", None), ("sum", jnp.asarray(vals))):
+        ref = groupby_oracle(jnp.asarray(keys), v, kind=kind, max_groups=card)
+        n = int(ref.num_groups)
+        out[kind] = dict(zip(np.asarray(ref.keys)[:n].tolist(),
+                             np.asarray(ref.values)[:n].tolist()))
+    return out["count"], out["sum"]
+
+
+def run(n: int | None = None, json_path: str | None = None):
+    n = n or N_ROWS
+    quick = n <= (1 << 18)
+    mults = (1, 10) if quick else (1, 10, 100)
+    results = {"n_rows": n, "budget": BUDGET, "chunks": CHUNKS,
+               "sweep": {}}
+    all_exact = True
+    gate_pass = None
+
+    for mult in mults:
+        card = BUDGET * mult
+        # size partitions so per-partition cardinality stays ≤ budget — the
+        # documented condition for the ≤2× device-bytes bound (the hot table
+        # never migrates; each second-pass table is sized to its partition)
+        parts = max(32, 4 * mult)
+        keys, vals = _data(n, card)
+        plan = GroupByPlan(
+            keys=("k",), aggs=(AggSpec("count"), AggSpec("sum", "v")),
+            strategy="concurrent", max_groups=BUDGET,
+            saturation=SaturationPolicy.SPILL, raw_keys=True,
+            execution=ExecutionPolicy(spill_partitions=parts),
+        )
+        handle = plan.stream(_chunked(keys, vals))
+        out = handle.result()
+        stats = handle.stats()
+        counts, sums = _result_maps(out)
+        ref_counts, ref_sums = _oracle_maps(keys, vals, card)
+        exact = counts == ref_counts and sums == ref_sums
+        all_exact = all_exact and exact
+
+        ratio = stats["peak_device_table_bytes"] / max(stats["residency_bytes"], 1)
+        if mult == 10:  # the acceptance gate's configuration
+            gate_pass = ratio <= 2.0
+        us = time_fn(
+            lambda plan=plan, keys=keys, vals=vals:
+                plan.stream(_chunked(keys, vals)).result().columns,
+            warmup=1, runs=2,
+        )
+        results["sweep"][f"{mult}x"] = {
+            "cardinality": card, "partitions": parts, "us": us,
+            "exact": exact, "device_bytes_ratio": ratio,
+            "spilled_rows": stats["spilled_rows"],
+            "spilled_bytes": stats["spilled_bytes"],
+            "peak_device_table_bytes": stats["peak_device_table_bytes"],
+            "residency_bytes": stats["residency_bytes"],
+            "peak_retained_bytes": stats["peak_retained_bytes"],
+        }
+        emit(
+            f"spill_card{mult}x", us,
+            f"card={card} device_bytes={stats['peak_device_table_bytes']} "
+            f"spilled_rows={stats['spilled_rows']} "
+            f"exact={'yes' if exact else 'NO'}",
+        )
+
+    # --- the gate, as its own row -----------------------------------------
+    ten = results["sweep"]["10x"]
+    emit("spill_device_bytes_ratio", ten["device_bytes_ratio"],
+         "≤2 at 10× cardinality gate PASS" if gate_pass
+         else ">2 at 10× cardinality gate FAIL")
+    emit("spill_exact", 1.0 if all_exact else 0.0,
+         "bit-exact vs oracle at every cardinality"
+         if all_exact else "MISMATCH vs oracle")
+
+    # --- overhead vs enough-memory concurrent at 10× ----------------------
+    card = BUDGET * 10
+    keys, vals = _data(n, card)
+    big_plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("count"), AggSpec("sum", "v")),
+        strategy="concurrent", max_groups=card,
+        saturation=SaturationPolicy.RAISE, raw_keys=True,
+    )
+    us_big = time_fn(
+        lambda: big_plan.stream(_chunked(keys, vals)).result().columns,
+        warmup=1, runs=2,
+    )
+    overhead = ten["us"] / max(us_big, 1e-9)
+    results["inmemory_us"] = us_big
+    results["spill_overhead"] = overhead
+    emit("spill_inmemory_baseline", us_big, f"max_groups={card}, never spills")
+    emit("spill_overhead", overhead, "spill cost vs enough-memory baseline")
+
+    results["exact"] = all_exact
+    results["gate_pass"] = bool(gate_pass)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, help="write BENCH_spill.json here")
+    ap.add_argument("--rows", type=int, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived", flush=True)
+    run(n=args.rows, json_path=args.json)

@@ -9,13 +9,12 @@ Three comparisons over the same multi-chunk stream:
     ingest (prefetch=0) on the checked pipeline, with real host-side
     staging cost per chunk (the source generates its keys on demand) — the
     poll is the serialization point the prefetch window hides;
-  * ``sharded`` — streaming carried-state ingest vs the buffered PR-2 path
-    (``ExecutionPolicy.sharded_ingest``) on simulated devices, reporting
-    peak host RSS and the executor's retained-chunk high-water mark
-    alongside wall-clock (each mode runs in its OWN subprocess so the RSS
-    high-water is per-mode).  LEGACY A/B: ``sharded_ingest="buffered"`` is
-    deprecated (it now warns at executor construction) and this comparison
-    is kept only until the buffered path is deleted.
+  * ``sharded`` — streaming carried-state ingest on simulated devices,
+    reporting peak host RSS and the executor's retained-chunk high-water
+    mark alongside wall-clock (run in its OWN subprocess so the RSS
+    high-water is per-run).  Streaming is the only sharded ingest mode:
+    the buffered gather-everything path was deleted once this benchmark
+    showed streaming at parity with bounded memory.
 
 Emits ``common.emit`` CSV; ``--json PATH`` additionally writes the raw
 numbers as a JSON artifact (CI uploads ``BENCH_stream.json`` per PR to
@@ -43,7 +42,7 @@ import json, resource, time
 import numpy as np, jax, jax.numpy as jnp
 from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy, Table
 
-n, chunks, ingest = %(n)d, %(chunks)d, %(ingest)r
+n, chunks = %(n)d, %(chunks)d
 rng = np.random.default_rng(3)
 keys = rng.integers(0, 1000, size=n).astype(np.uint32)
 vals = rng.normal(size=n).astype(np.float32)
@@ -51,7 +50,7 @@ mesh = jax.make_mesh((8,), ("data",))
 plan = GroupByPlan(
     keys=("k",), aggs=(AggSpec("sum", "v"),), strategy="sharded",
     max_groups=1024, saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
-    execution=ExecutionPolicy(mesh=mesh, axis="data", sharded_ingest=ingest),
+    execution=ExecutionPolicy(mesh=mesh, axis="data"),
 )
 step = n // chunks
 def source():
@@ -133,31 +132,22 @@ def run(n: int | None = None, json_path: str | None = None):
     )
     emit("stream_overlap_speedup", results["overlap_speedup"], ">1 = overlap pays")
 
-    # --- buffered vs streaming sharded (8 simulated devices) --------------
-    for ingest in ("buffered", "stream"):
-        try:
-            res = run_in_devices(
-                8, _SHARDED_CODE % dict(n=min(n, 1 << 19), chunks=CHUNKS,
-                                        ingest=ingest),
-            )
-        except RuntimeError as e:  # noqa: BLE001 — report, don't abort suite
-            emit(f"stream_sharded_{ingest}_FAILED", -1,
-                 str(e).splitlines()[-1][:80].replace(",", ";"))
-            continue
-        results[f"sharded_{ingest}"] = res
+    # --- streaming sharded ingest (8 simulated devices) -------------------
+    try:
+        res = run_in_devices(
+            8, _SHARDED_CODE % dict(n=min(n, 1 << 19), chunks=CHUNKS),
+        )
+    except RuntimeError as e:  # noqa: BLE001 — report, don't abort suite
+        emit("stream_sharded_FAILED", -1,
+             str(e).splitlines()[-1][:80].replace(",", ";"))
+    else:
+        results["sharded_stream"] = res
         emit(
-            f"stream_sharded_{ingest}", res["us"],
+            "stream_sharded", res["us"],
             f"rss={res['peak_rss_mb']:.0f}MB "
             f"buffered_chunks={res['peak_buffered_chunks']} "
             f"groups={res['groups']}",
         )
-    if "sharded_buffered" in results and "sharded_stream" in results:
-        ratio = results["sharded_buffered"]["us"] / max(
-            results["sharded_stream"]["us"], 1e-9
-        )
-        results["sharded_stream_speedup"] = ratio
-        emit("stream_sharded_speedup", ratio, "≥1 = streaming ≥ parity PASS"
-             if ratio >= 1.0 else "<1 = streaming slower")
 
     if json_path:
         results["n_rows"] = n

@@ -5,9 +5,11 @@
 Prints markdown: §Dry-run (memory + collectives per cell, both meshes),
 §Roofline (three terms, bottleneck, useful-flops fraction — single-pod),
 §Streaming (bench_stream's BENCH_stream.json artifact: stream-vs-one-shot,
-ingest-overlap and buffered-vs-streaming-sharded numbers, incl. peak RSS)
-and §Serving (bench_serve's BENCH_serve.json artifact: batched-vs-
-sequential multi-query dispatch, fairness clocks, cancellation latency).
+ingest-overlap and streaming-sharded numbers, incl. peak RSS),
+§Serving (bench_serve's BENCH_serve.json artifact: batched-vs-sequential
+multi-query dispatch, fairness clocks, cancellation latency) and §Spill
+(bench_spill's BENCH_spill.json artifact: out-of-core cardinality sweep,
+exactness, device-bytes gate, overhead vs the enough-memory baseline).
 """
 from __future__ import annotations
 
@@ -75,18 +77,13 @@ def streaming_table(path):
         print(f"| ingest prefetch=0 | {r['overlap_prefetch0_us']/1e3:.1f} ms |")
         print(f"| ingest prefetch=2 | {r['overlap_prefetch2_us']/1e3:.1f} ms |")
         print(f"| overlap speedup | {r['overlap_speedup']:.2f}× |")
-    for mode in ("buffered", "stream"):
-        cell = r.get(f"sharded_{mode}")
-        if cell:
-            print(
-                f"| sharded {mode} | {cell['us']/1e3:.1f} ms, "
-                f"peak RSS {cell['peak_rss_mb']:.0f} MB, "
-                f"{cell['peak_buffered_chunks']} buffered chunks |"
-            )
-    if "sharded_stream_speedup" in r:
-        gate = "PASS" if r["sharded_stream_speedup"] >= 1.0 else "FAIL"
-        print(f"| streaming-sharded vs buffered | "
-              f"{r['sharded_stream_speedup']:.2f}× ({gate} ≥1× gate) |")
+    cell = r.get("sharded_stream")
+    if cell:
+        print(
+            f"| sharded streaming | {cell['us']/1e3:.1f} ms, "
+            f"peak RSS {cell['peak_rss_mb']:.0f} MB, "
+            f"{cell['peak_buffered_chunks']} buffered chunks |"
+        )
 
 
 def serving_table(path):
@@ -115,16 +112,43 @@ def serving_table(path):
               f"(slot handoff {handoff}) |")
 
 
+def spill_table(path):
+    with open(path) as f:
+        r = json.load(f)
+    print(f"Rows: {r.get('n_rows', '—')}, residency budget "
+          f"{r.get('budget', '—')} groups\n")
+    print("| cardinality | time | device table bytes | spilled rows | exact |")
+    print("|---|---|---|---|---|")
+    for mult, cell in sorted(r.get("sweep", {}).items(),
+                             key=lambda kv: kv[1]["cardinality"]):
+        print(
+            f"| {cell['cardinality']} ({mult} budget) | {cell['us']/1e3:.1f} ms "
+            f"| {cell['peak_device_table_bytes']} "
+            f"| {cell['spilled_rows']} "
+            f"| {'yes' if cell['exact'] else 'NO'} |"
+        )
+    gate = "PASS" if r.get("gate_pass") else "FAIL"
+    ten = r.get("sweep", {}).get("10x")
+    if ten:
+        print(f"| device-bytes gate (10×) | {ten['device_bytes_ratio']:.2f}× "
+              f"residency ({gate} ≤2× gate) | | | |")
+    if "spill_overhead" in r:
+        print(f"| overhead vs enough-memory | {r['spill_overhead']:.1f}× "
+              f"(baseline {r['inmemory_us']/1e3:.1f} ms) | | | |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--section", default="both",
                     choices=["dryrun", "roofline", "streaming", "serving",
-                             "both"])
+                             "spill", "both"])
     ap.add_argument("--stream-json", default="BENCH_stream.json",
                     help="bench_stream artifact for §Streaming")
     ap.add_argument("--serve-json", default="BENCH_serve.json",
                     help="bench_serve artifact for §Serving")
+    ap.add_argument("--spill-json", default="BENCH_spill.json",
+                    help="bench_spill artifact for §Spill")
     args = ap.parse_args()
     cells = load(args.dir)
     if args.section in ("dryrun", "both"):
@@ -142,6 +166,10 @@ def main():
     if args.section in ("serving", "both") and os.path.exists(args.serve_json):
         print("### Concurrent-query serving (bench_serve)\n")
         serving_table(args.serve_json)
+        print()
+    if args.section in ("spill", "both") and os.path.exists(args.spill_json):
+        print("### Out-of-core spill (bench_spill)\n")
+        spill_table(args.spill_json)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ def main() -> None:
         bench_resize,
         bench_roofline,
         bench_serve,
+        bench_spill,
         bench_stream,
         bench_ticketer,
         bench_ticketing,
@@ -46,6 +47,8 @@ def main() -> None:
             n=n, json_path=os.environ.get("BENCH_STREAM_JSON"))),
         ("serving", lambda: bench_serve.run(
             n=n, json_path=os.environ.get("BENCH_SERVE_JSON"))),
+        ("spill", lambda: bench_spill.run(
+            n=n, json_path=os.environ.get("BENCH_SPILL_JSON"))),
         ("roofline", bench_roofline.run),
     ]
     for name, fn in suites:

@@ -139,6 +139,15 @@ class RunningStats:
         """Current heavy-hitter candidates, heaviest first."""
         return sorted(self._counters, key=self._counters.get, reverse=True)
 
+    def heavy_array(self, limit: int | None = None):
+        """Heavy-hitter candidates as a uint32 numpy array, heaviest first —
+        the vectorized form routing code (the spill executor's hot-set
+        classifier) intersects against whole key columns."""
+        import numpy as np
+
+        keys = self.heavy_keys if limit is None else self.heavy_keys[:limit]
+        return np.asarray(keys, dtype=np.uint32) if keys else np.zeros((0,), np.uint32)
+
     @property
     def stats(self) -> WorkloadStats:
         u = len(self._distinct)

@@ -108,6 +108,18 @@ def grow_bound(
     return table
 
 
+def table_nbytes(table: tk.TicketTable) -> int:
+    """Device bytes one ticket table holds (probe arrays, the ticket-ordered
+    key copy, and the scalar flags) — the accounting unit the out-of-core
+    spill path and the memory benchmarks use to track footprint: under
+    ``saturation="spill"`` the residency invariant keeps this constant
+    (the table never migrates), which is what the ≤2× gate measures."""
+    return int(
+        table.keys.nbytes + table.tickets.nbytes + table.key_by_ticket.nbytes
+        + table.count.nbytes + table.overflowed.nbytes
+    )
+
+
 def maybe_resize(table: tk.TicketTable, load_factor: float = 0.5) -> tk.TicketTable:
     """Host-side growth check between morsels (the engine's insertion point
     for resize, analogous to the paper pausing workers to migrate)."""

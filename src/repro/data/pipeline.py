@@ -12,7 +12,9 @@ This module also defines the engine's pull-based streaming source contract,
 :class:`ChunkSource`: anything with a ``chunks() -> Iterator[Table]``
 method feeds ``GroupByPlan.stream`` / ``collect`` directly.  Adapters here
 cover the common shapes — an iterable of tables (:class:`IterableSource`),
-raw key/value arrays morselized into chunks (:class:`ArraySource`) — and
+raw key/value arrays morselized into chunks (:class:`ArraySource`),
+host-resident column blocks streamed back one chunk at a time
+(:class:`BlockSource`, the spill readmission path) — and
 :class:`SyntheticLM` itself satisfies the protocol (``chunks()`` yields
 token-key tables, one per generated batch).
 
@@ -73,6 +75,25 @@ class ArraySource:
         for start in range(0, n, self.chunk_rows):
             end = min(start + self.chunk_rows, n)
             yield Table({k: v[start:end] for k, v in self.columns.items()})
+
+
+@dataclass
+class BlockSource:
+    """Adapt host-resident column blocks (``{name: np.ndarray}`` dicts) to
+    :class:`ChunkSource`: each block becomes one ``Table`` chunk, its
+    arrays materialized to device only when the consumer pulls it.  This is
+    the spill readmission path (``engine/spill.py``): a cold partition's
+    buffered blocks stream back through the ordinary scan pipeline one
+    chunk at a time, so the second-pass merge never holds more than one
+    block on device."""
+
+    blocks: tuple
+
+    def chunks(self) -> Iterator["Table"]:
+        from repro.engine.columns import Table
+
+        for block in self.blocks:
+            yield Table({k: jnp.asarray(v) for k, v in block.items()})
 
 
 @dataclass

@@ -17,6 +17,7 @@ from repro.engine.plan_api import (
     iter_chunks,
 )
 from repro.engine.plans import Aggregate, Filter, Scan
+from repro.engine.spill import SpillManager
 
 __all__ = [
     "Table",
@@ -39,5 +40,6 @@ __all__ = [
     "make_executor",
     "resolve_plan",
     "resolve_plan_stats",
+    "SpillManager",
     "StreamHandle",
 ]

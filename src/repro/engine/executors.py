@@ -36,8 +36,6 @@ The strategies:
   * ``sharded``    — mesh execution with per-device state carried across
     chunks (``core.distributed.ShardedCarry``) and ONE merge at finalize:
     state is O(devices × capacity), independent of the stream length.
-    ``execution.sharded_ingest="buffered"`` keeps the PR-2 buffer-everything
-    path for A/B benchmarking (DEPRECATED — warns at construction).
 
 Saturation is enforced here, uniformly: every executor implements
 ``raise`` / ``grow`` / ``unchecked`` (plan_api.SaturationPolicy).  ``grow``
@@ -46,6 +44,9 @@ their bound in-stream BEFORE anything is dropped (concurrent, hybrid,
 sharded: §4.4 pause/migrate/resume applied to the cardinality bound) or
 recover per chunk and grow their carried merge state (pallas, partitioned,
 direct).  Only the one-shot sort executor still gathers the stream.
+``saturation="spill"`` lowers to the out-of-core executor
+(``engine/spill.py``): the concurrent hash pipeline with a bounded device
+residency and host-spilled cold partitions, merged exactly at finalize.
 """
 from __future__ import annotations
 
@@ -87,6 +88,22 @@ def make_executor(plan: GroupByPlan):
             SaturationPolicy.GROW if plan.max_groups is None
             else SaturationPolicy.RAISE
         ))
+    if plan.saturation == SaturationPolicy.SPILL:
+        if plan.strategy not in ("auto", "concurrent"):
+            raise ValueError(
+                "saturation='spill' runs on the concurrent hash pipeline; "
+                f"strategy {plan.strategy!r} does not support spilling"
+            )
+        if plan.strategy == "concurrent" and plan.execution.ticketing != "hash":
+            raise ValueError(
+                "saturation='spill' requires ticketing='hash' (the hot "
+                "table is the probe table the spill router classifies "
+                "against)"
+            )
+        if plan.strategy == "concurrent" and plan.max_groups is not None:
+            from repro.engine.spill import SpillExecutor
+
+            return SpillExecutor(plan)
     if plan.strategy == "auto" or plan.max_groups is None:
         return _ResolvingExecutor(plan)
     if plan.strategy == "concurrent":
@@ -102,19 +119,6 @@ def make_executor(plan: GroupByPlan):
     if plan.strategy == "partitioned":
         return _PartitionedExecutor(plan)
     if plan.strategy == "sharded":
-        if plan.execution.sharded_ingest == "buffered":
-            import warnings
-
-            warnings.warn(
-                "ExecutionPolicy(sharded_ingest='buffered') is deprecated "
-                "and will be removed in a future release; the default "
-                "streaming ingest (sharded_ingest='stream') carries "
-                "per-device state across chunks with O(devices × capacity) "
-                "memory instead of buffering every chunk.",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            return _BufferedShardedExecutor(plan)
         return _ShardedExecutor(plan)
     raise ValueError(f"unknown strategy {plan.strategy!r}")
 
@@ -129,6 +133,7 @@ class _ExecutorBase:
     that retain no chunks report a zero buffer high-water mark."""
 
     peak_buffered_chunks = 0  # chunks retained beyond the in-flight window
+    peak_retained_bytes = 0   # host bytes retained beyond the in-flight window
 
     def open(self) -> None:
         pass
@@ -139,6 +144,15 @@ class _ExecutorBase:
 
     def poll(self, token) -> None:
         pass
+
+    def memory_stats(self) -> dict:
+        """Uniform memory-telemetry read (``StreamHandle.stats()`` surfaces
+        it): retention high-water marks, extended by executors that buffer
+        (sort) or spill (engine/spill.py) with their own counters."""
+        return {
+            "peak_buffered_chunks": self.peak_buffered_chunks,
+            "peak_retained_bytes": self.peak_retained_bytes,
+        }
 
 
 def _chunk_keys_values(plan: GroupByPlan, chunk: Table):
@@ -198,7 +212,12 @@ def resolve_plan_stats(plan: GroupByPlan, stats: adaptive.WorkloadStats) -> Grou
         max_groups = max(1, min(max(stats.est_groups * 2, 64), max(stats.n_rows, 1)))
     strategy, execution = plan.strategy, plan.execution
     if strategy == "auto":
-        if stats.est_top_freq >= 0.25 and stats.est_groups > 4096:
+        if plan.saturation == SaturationPolicy.SPILL:
+            # spill IS the concurrent hash pipeline plus a host cold path;
+            # the resolved bound becomes its device residency budget
+            strategy = "concurrent"
+            update = execution.update or "scatter"
+        elif stats.est_top_freq >= 0.25 and stats.est_groups > 4096:
             # Heavy hitters at high cardinality (paper Table 2's 0.34×–0.48×
             # corner): absorb the hitters in registers, run the tail clean.
             strategy = "hybrid"
@@ -255,6 +274,12 @@ class _ResolvingExecutor(_ExecutorBase):
     @property
     def peak_buffered_chunks(self) -> int:
         return self._inner.peak_buffered_chunks if self._inner else 0
+
+    def memory_stats(self) -> dict:
+        return (
+            self._inner.memory_stats() if self._inner
+            else super().memory_stats()
+        )
 
     def _sample_keys(self, chunk: Table) -> jnp.ndarray:
         head = Table({k: v[: self.SAMPLE_ROWS] for k, v in chunk.columns.items()})
@@ -511,6 +536,7 @@ class _BufferedExecutor(_ExecutorBase):
         self._plan = plan
         self._keys, self._vals, self._rows = [], [], 0
         self.peak_buffered_chunks = 0
+        self.peak_retained_bytes = 0
 
     def consume(self, chunk: Table) -> None:
         keys, vals = _chunk_keys_values(self._plan, chunk)
@@ -518,17 +544,15 @@ class _BufferedExecutor(_ExecutorBase):
         self._keys.append(keys)
         self._vals.append(vals)
         self.peak_buffered_chunks = max(self.peak_buffered_chunks, len(self._keys))
+        self.peak_retained_bytes += int(keys.nbytes) + sum(
+            int(v.nbytes) for v in vals.values()
+        )
 
     def _gathered(self):
         keys = _concat(self._keys)
         vals = {c: _concat([v[c] for v in self._vals])
                 for c in value_columns(self._plan.aggs)}
         return keys, vals
-
-    def _gathered_single(self, agg):
-        keys, vals = self._gathered()
-        v = vals[agg.column] if agg.column else jnp.ones(keys.shape, jnp.float32)
-        return keys, v
 
 
 class _SortExecutor(_BufferedExecutor):
@@ -1318,118 +1342,6 @@ class _ShardedExecutor(_ExecutorBase):
             get = lambda c, k: accs[(c, k)]
         return build_result_table(
             self._plan.aggs, get, kbt, count, max_groups,
-        )
-
-
-class _BufferedShardedExecutor(_BufferedExecutor):
-    """The PR-2 buffer-everything sharded path, kept behind
-    ``ExecutionPolicy(sharded_ingest="buffered")`` as the A/B baseline for
-    ``benchmarks/bench_stream.py``: every chunk's columns gather on host
-    and the whole mesh pipeline (including the per-row preagg + spill
-    exchange) runs over the concatenated rows at finalize — O(total rows)
-    state, the memory-pressure failure mode the streaming executor
-    removes."""
-
-    def __init__(self, plan: GroupByPlan):
-        super().__init__(plan)
-        self._agg = _single_agg(plan, "sharded")
-        if plan.execution.mesh is None:
-            raise ValueError("strategy 'sharded' requires ExecutionPolicy.mesh")
-        if plan.execution.shard_merge not in ("dense_psum", "all_to_all"):
-            raise ValueError(f"unknown shard_merge {plan.execution.shard_merge!r}")
-        self.raw = None
-
-    def finalize_raw(self):
-        """Run the mesh pipeline under the saturation policy and return the
-        strategy's native output (sets ``.raw``), skipping the unified-table
-        compaction.
-
-        Returns ``(max_groups, count)`` alongside setting ``self.raw``.
-        """
-        from repro.core import distributed as dist
-
-        p, ex = self._plan, self._plan.execution
-        keys, vals = self._gathered_single(self._agg)
-        max_groups = p.max_groups
-        max_local_groups = ex.max_local_groups
-        partition_capacity = ex.partition_capacity
-        while True:
-            if ex.shard_merge == "dense_psum":
-                res, table_ovf = dist._concurrent_sharded_impl(
-                    ex.mesh, keys, vals, kind=self._agg.kind,
-                    max_groups=max_groups, axis=ex.axis,
-                    max_local_groups=max_local_groups,
-                    update=ex.update or "scatter",
-                )
-                self.raw = res
-                count = res.num_groups
-                overflow_rows = None
-                if p.saturation != SaturationPolicy.UNCHECKED and int(
-                    jax.device_get(table_ovf)
-                ) > 0:
-                    # a LOCAL table overflow drops keys before the union, so
-                    # the global count can't see it — grow both bounds
-                    if (p.saturation != SaturationPolicy.GROW
-                            or max_groups >= self._rows):
-                        raise GroupByOverflowError(
-                            "sharded GROUP BY overflow: a per-device table "
-                            f"exceeded max_local_groups={max_local_groups or max_groups} "
-                            f"(or the union exceeded max_groups={max_groups}); "
-                            "dropped keys never reach the merge. Use "
-                            "SaturationPolicy.GROW or larger bounds."
-                        )
-                    max_groups = _next_bound(max_groups, self._rows)
-                    max_local_groups = max_groups
-                    continue
-            else:
-                keys_p, vals_p, counts_p, ovf = dist._partitioned_sharded_impl(
-                    ex.mesh, keys, vals, kind=self._agg.kind,
-                    max_groups=max_groups, axis=ex.axis,
-                    preagg_capacity=ex.preagg_capacity,
-                    partition_capacity=partition_capacity,
-                )
-                self.raw = (keys_p, vals_p, counts_p, ovf)
-                count = jnp.sum(counts_p)
-                overflow_rows = ovf
-            if p.saturation == SaturationPolicy.UNCHECKED:
-                return max_groups, count
-            if overflow_rows is not None and int(jax.device_get(jnp.sum(overflow_rows))) > 0:
-                # GROW: double the per-partition bucket capacity and re-run
-                # the exchange.  One partition can at most receive every
-                # entry a device emits, so the doubling is bounded.
-                ndev = max(ex.mesh.shape[ex.axis], 1)
-                limit = ex.preagg_capacity + keys.shape[0] // ndev
-                base = partition_capacity or (2 * limit // ndev)
-                if p.saturation != SaturationPolicy.GROW or base >= limit:
-                    raise GroupByOverflowError(
-                        "partitioned exchange dropped rows (partition bucket "
-                        "overflow); raise ExecutionPolicy.partition_capacity "
-                        "or use SaturationPolicy.GROW"
-                    )
-                partition_capacity = min(2 * base, limit)
-                continue
-            issued = int(jax.device_get(count))
-            if issued <= max_groups:
-                return max_groups, count
-            if p.saturation == SaturationPolicy.RAISE or max_groups >= self._rows:
-                raise _overflow_error(issued, max_groups)
-            max_groups = _next_bound(max_groups, self._rows, issued=issued)
-
-    def finalize(self) -> Table:
-        max_groups, count = self.finalize_raw()
-        if self._plan.execution.shard_merge == "dense_psum":
-            kbt, acc = self.raw.keys, self.raw.values
-        else:
-            keys_p, vals_p, counts_p, _ = self.raw
-            ndev = self._plan.execution.mesh.shape[self._plan.execution.axis]
-            per_dev = keys_p.shape[0] // ndev
-            idx = jnp.arange(keys_p.shape[0])
-            valid = (idx % per_dev) < jnp.take(counts_p.reshape(-1), idx // per_dev)
-            order = jnp.argsort(~valid, stable=True)
-            kbt = jnp.take(keys_p.reshape(-1), order)[:max_groups]
-            acc = jnp.take(vals_p.reshape(-1), order)[:max_groups]
-        return build_result_table(
-            self._plan.aggs, lambda c, k: acc, kbt, count, max_groups,
         )
 
 

@@ -30,6 +30,11 @@ which entry point you called:
   * ``unchecked`` — the paper's perfect-estimate regime: fixed capacity,
     no migrations, no overflow check and no blocking device sync; rows
     past the bound (or a saturated probe table) drop.
+  * ``spill``     — out-of-core: ``max_groups`` becomes a device RESIDENCY
+    budget, not a result bound.  Hot groups stay in the device table, rows
+    hashing to cold partitions batch to host buffers, and finalize merges
+    the spilled partitions back through the same scan pipeline
+    (engine/spill.py) — exact totals with bounded device memory.
 
 The seven legacy entry points survive as thin adapters over this API with
 identical signatures (`concurrent_groupby`, `partitioned_groupby`,
@@ -75,8 +80,10 @@ class SaturationPolicy:
     RAISE = "raise"          # refuse to materialize truncated results
     GROW = "grow"            # migrate-and-replay recovery, then materialize
     UNCHECKED = "unchecked"  # paper's perfect-estimate regime: no check
+    SPILL = "spill"          # out-of-core: bounded device residency, cold
+    #                          partitions spill to host, exact merged totals
 
-    ALL = (RAISE, GROW, UNCHECKED)
+    ALL = (RAISE, GROW, UNCHECKED, SPILL)
 
 
 @dataclass(frozen=True)
@@ -96,7 +103,8 @@ class ExecutionPolicy:
     key_domain: int | None = None     # direct ticketing: bounded key domain
     # streaming ingest
     prefetch: int = 2                 # in-flight chunks before the oldest poll
-    sharded_ingest: str = "stream"    # stream (carried state) | buffered (DEPRECATED)
+    # out-of-core spill (saturation="spill")
+    spill_partitions: int = 32        # cold-key hash partitions on host
     # pallas strategy
     morsel_size: int = 1024           # kernel grid morsel
     interpret: bool | None = None     # None → auto (False on TPU)
@@ -125,11 +133,12 @@ class GroupByPlan:
       strategy: ``auto`` (planner decides from sample statistics) or one of
         ``concurrent | partitioned | hybrid | pallas | sharded``.
       max_groups: cardinality bound; None → estimated from a sample.
-      saturation: :class:`SaturationPolicy` — raise | grow | unchecked.
-        None (default) resolves to ``grow`` when ``max_groups`` is
+      saturation: :class:`SaturationPolicy` — raise | grow | unchecked |
+        spill.  None (default) resolves to ``grow`` when ``max_groups`` is
         estimated (a sample cannot see a long tail, so the bound must be
         allowed to recover) and ``raise`` when it is an explicit caller
-        contract.
+        contract.  ``spill`` reinterprets ``max_groups`` as a device
+        residency budget and keeps totals exact out-of-core.
       execution: :class:`ExecutionPolicy` tuning knobs.
       raw_keys: the single key column already IS the uint32 hash-key space
         (EMPTY_KEY sentinel reserved) — skip ``combine_keys``.  Used by the
@@ -250,6 +259,23 @@ class StreamHandle:
         """Executor-retained chunk high-water mark (0 for every streaming
         strategy; the in-flight prefetch window is not retention)."""
         return getattr(self._ex, "peak_buffered_chunks", 0)
+
+    def stats(self) -> dict:
+        """Ingest counters + the executor's memory telemetry as one flat
+        dict: ``chunks_consumed``/``rows_consumed``, the
+        ``peak_buffered_chunks`` high-water mark, ``peak_retained_bytes``
+        (host bytes an executor holds beyond the in-flight window), and —
+        on a spilling executor — spilled bytes/rows, per-partition
+        breakdowns and device-table footprints.  Readable at any point:
+        mid-stream (pairs with ``snapshot()``), after ``result()``, or on a
+        cancelled handle (ingest counters only)."""
+        out = {
+            "chunks_consumed": self.chunks_consumed,
+            "rows_consumed": self.rows_consumed,
+        }
+        if self._ex is not None:
+            out.update(self._ex.memory_stats())
+        return out
 
     def _dispatch(self, chunk: Table) -> None:
         token = self._ex.consume_async(chunk)

@@ -1,0 +1,347 @@
+"""Out-of-core GROUP BY: the spill-to-host subsystem (``saturation="spill"``).
+
+The paper's analysis assumes the (grown) hash table fits in memory; the
+``grow`` policy inherits that assumption, so a stream whose distinct-key
+count outruns device capacity either raises or truncates.  This module is
+the fourth, production-honest answer: ``max_groups`` becomes a **device
+residency budget** rather than a result-cardinality bound.  Hot groups stay
+in the device ticket table — classified by the Misra–Gries heavy-hitter
+sketch carried in :class:`repro.core.adaptive.RunningStats` — while rows
+hashing to cold partitions batch into host buffers (plain numpy on the CPU
+backend; the pinned-host analogue of what ``device_put`` with a host memory
+kind would be on TPU).  ``finalize`` runs a second-pass streamed merge:
+each spilled partition is aggregated one at a time through the SAME
+scan-compiled morsel pipeline and unioned with the device table, so results
+are exact regardless of how well the hot/cold classification guessed.
+
+Residency invariant (what the memory benchmark gates on): admission control
+in :meth:`SpillExecutor.consume_async` guarantees the hot table's group
+count never exceeds the budget, and the one capacity rule
+(``hashing.table_capacity``) gives the probe table ≥ 2× budget slots — so
+the load-factor pause can never fire, the device table NEVER migrates, and
+its footprint is a constant while true cardinality scales 10–100× past it.
+The second pass sizes each partition operator to the partition's exact
+cardinality (known host-side), so peak device table bytes stay ≤ hot table
++ one partition table — ≤ 2× the residency footprint whenever a partition's
+cardinality fits the budget (``benchmarks/bench_spill.py`` asserts it).
+
+Correctness does not depend on the classifier: a key demoted after being
+admitted (or admitted after first spilling) has rows on both sides, and the
+finalize union scatter-merges the partition partials into the hot
+accumulators by ticket (``mean`` decomposes into sum+count, so every
+partial merges with sum/min/max semantics).  Partitions are hash-disjoint,
+so no cross-partition dedup is needed.
+
+``finalize`` mutates neither the operator nor the spill buffers — it stays
+the idempotent pure read the streaming contract requires, so
+``StreamHandle.snapshot()`` works mid-spill and consumption continues
+afterwards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adaptive, resize
+from repro.core import ticketing as tk
+from repro.core import updates as up
+from repro.core.hashing import EMPTY_KEY
+from repro.engine.columns import Table
+from repro.engine.executors import _MERGE_KIND, _chunk_keys_values, _ExecutorBase
+from repro.engine.groupby import GroupByOperator, build_result_table, expand_agg_specs
+from repro.engine.plan_api import GroupByPlan, value_columns
+
+_EMPTY32 = np.uint32(0xFFFFFFFF)
+
+
+def partition_of(keys: np.ndarray, num_partitions: int) -> np.ndarray:
+    """Cold-partition id per key: murmur3 fmix32 (the same finalizer the
+    device ticketing hash uses) mod the partition count, replicated in
+    numpy so routing runs host-side on already-fetched keys."""
+    x = keys.astype(np.uint32, copy=True)
+    x ^= x >> np.uint32(16)
+    x *= np.uint32(0x85EBCA6B)
+    x ^= x >> np.uint32(13)
+    x *= np.uint32(0xC2B2AE35)
+    x ^= x >> np.uint32(16)
+    return (x % np.uint32(num_partitions)).astype(np.int64)
+
+
+class SpillManager:
+    """Host-resident cold partitions with spill/readmit accounting.
+
+    Rows arrive pre-routed (``partition_of``) and append partition-major as
+    contiguous numpy column blocks; each partition reads back as a
+    :class:`repro.data.pipeline.BlockSource` so the second-pass merge
+    streams it through the ordinary chunk pipeline.  Counters (spilled
+    rows/bytes, per-partition breakdown, readmissions) surface through
+    ``SpillExecutor.memory_stats`` → ``StreamHandle.stats()``.
+    """
+
+    def __init__(self, num_partitions: int, value_cols):
+        self.num_partitions = int(num_partitions)
+        self._value_cols = tuple(value_cols)
+        self._blocks: list[list[dict]] = [[] for _ in range(self.num_partitions)]
+        self.partition_rows = [0] * self.num_partitions
+        self.partition_bytes = [0] * self.num_partitions
+        self.spilled_rows = 0
+        self.spilled_bytes = 0
+        self.spill_events = 0
+        self.readmitted_rows = 0
+
+    def spill(self, keys: np.ndarray, pids: np.ndarray, vals: dict) -> None:
+        """Append one chunk's cold rows (already filtered to cold) to their
+        partitions, one contiguous block per touched partition."""
+        order = np.argsort(pids, kind="stable")
+        keys = np.ascontiguousarray(keys[order])
+        pids = pids[order]
+        vals = {c: np.ascontiguousarray(np.asarray(v)[order]) for c, v in vals.items()}
+        uniq, starts = np.unique(pids, return_index=True)
+        bounds = starts.tolist() + [len(pids)]
+        for pid, lo, hi in zip(uniq.tolist(), bounds[:-1], bounds[1:]):
+            block = {"__key__": keys[lo:hi]}
+            for c in self._value_cols:
+                block[c] = vals[c][lo:hi]
+            nbytes = sum(int(a.nbytes) for a in block.values())
+            self._blocks[pid].append(block)
+            self.partition_rows[pid] += hi - lo
+            self.partition_bytes[pid] += nbytes
+            self.spilled_rows += hi - lo
+            self.spilled_bytes += nbytes
+        self.spill_events += 1
+
+    def partitions(self) -> list[int]:
+        """Non-empty partition ids (the second pass visits these)."""
+        return [p for p in range(self.num_partitions) if self.partition_rows[p]]
+
+    def partition_keys(self, pid: int) -> np.ndarray:
+        """All spilled keys of one partition (host array, for exact
+        cardinality sizing of the second-pass operator)."""
+        blocks = self._blocks[pid]
+        if not blocks:
+            return np.zeros((0,), np.uint32)
+        return np.concatenate([b["__key__"] for b in blocks])
+
+    def readmit(self, pid: int):
+        """One partition as a chunk source: every stored block becomes a
+        ``Table`` chunk, materialized to device only as the merge pass pulls
+        it.  Buffers are NOT freed — readmission is a read, so finalize
+        stays idempotent."""
+        from repro.data.pipeline import BlockSource
+
+        self.readmitted_rows += self.partition_rows[pid]
+        return BlockSource(tuple(self._blocks[pid]))
+
+    def stats(self) -> dict:
+        return {
+            "spilled_rows": self.spilled_rows,
+            "spilled_bytes": self.spilled_bytes,
+            "spilled_partitions": len(self.partitions()),
+            "spill_events": self.spill_events,
+            "readmitted_rows": self.readmitted_rows,
+            "partition_rows": tuple(self.partition_rows),
+            "partition_bytes": tuple(self.partition_bytes),
+        }
+
+
+class SpillExecutor(_ExecutorBase):
+    """``saturation="spill"`` on the concurrent hash pipeline.
+
+    Per chunk: canonicalize keys, fold the heavy-hitter sketch, probe the
+    hot table (one ``tk.lookup``), then route host-side — rows whose key is
+    already hot (or newly admitted under the residency budget) feed the
+    device operator with cold rows masked to the EMPTY sentinel; cold rows
+    go to the :class:`SpillManager`.  Admission demotes cold partitions
+    (halving the resident set) whenever a chunk's new uniques would push
+    the device count past the budget, falling back to the heaviest sketch
+    keys that still fit, so ``count ≤ budget`` holds exactly (mirrored on
+    the host — no extra sync).
+
+    ``consume_async``/``poll`` delegate the device half to the operator's
+    own tokens, so the double-buffered ingest window works unchanged.
+    """
+
+    def __init__(self, plan: GroupByPlan):
+        if plan.execution.ticketing != "hash":
+            raise ValueError(
+                "saturation='spill' requires ticketing='hash' (the hot table "
+                "is the probe table the spill router classifies against)"
+            )
+        p, ex = plan, plan.execution
+        self._plan = plan
+        self._budget = int(p.max_groups)
+        self._vcols = value_columns(p.aggs)
+        self._specs = expand_agg_specs(p.aggs)
+        # The hot operator: table_capacity gives ≥ 2× budget probe slots, and
+        # admission keeps count ≤ budget, so the load-factor pause can never
+        # fire — the device table never migrates and its bytes are constant.
+        self._op = GroupByOperator(
+            key_columns=["__key__"], aggs=list(p.aggs), max_groups=self._budget,
+            morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
+            use_kernel=ex.use_kernel, load_factor=ex.load_factor,
+            pipeline=ex.pipeline, capacity=ex.capacity, raw_keys=True,
+            check_overflow=True, grow_bound=False,
+        )
+        self._manager = SpillManager(ex.spill_partitions, self._vcols)
+        self._sketch = adaptive.RunningStats(domain=ex.key_domain)
+        self._resident = np.ones(ex.spill_partitions, bool)
+        self._host_count = 0        # exact mirror of the hot table's count
+        self._rows = 0
+        self._residency_bytes = self._device_bytes(self._op)
+        self._peak_device_bytes = self._residency_bytes
+
+    @staticmethod
+    def _device_bytes(op: GroupByOperator) -> int:
+        return resize.table_nbytes(op._table) + sum(
+            int(a.nbytes) for a in op._state.accs
+        )
+
+    # -- streaming protocol --------------------------------------------------
+
+    def consume(self, chunk: Table) -> None:
+        self.poll(self.consume_async(chunk))
+
+    def consume_async(self, chunk: Table):
+        keys, vals = _chunk_keys_values(self._plan, chunk)
+        self._rows += int(keys.shape[0])
+        self._sketch.update(keys)
+        hits_dev = tk.lookup(self._op._table, keys)
+        keys_np = np.asarray(jax.device_get(keys))
+        hits = np.asarray(jax.device_get(hits_dev)) >= 0
+        valid = keys_np != _EMPTY32
+        pids = partition_of(keys_np, self._manager.num_partitions)
+        admit, n_new = self._admit(keys_np, valid, hits, pids)
+        self._host_count += n_new
+        device_mask = hits | admit
+        dkeys = jnp.where(jnp.asarray(device_mask), keys, jnp.uint32(EMPTY_KEY))
+        token = self._op.consume_async(
+            Table({"__key__": dkeys, **{c: vals[c] for c in self._vcols}})
+        )
+        cold = valid & ~device_mask
+        if cold.any():
+            cold_vals = {
+                c: np.asarray(jax.device_get(vals[c]))[cold] for c in self._vcols
+            }
+            self._manager.spill(keys_np[cold], pids[cold], cold_vals)
+        return token
+
+    def poll(self, token) -> None:
+        self._op.poll(token)
+
+    def _admit(self, keys_np, valid, hits, pids):
+        """Choose this chunk's NEW device admissions under the budget.
+
+        Candidates are missing keys that are sketch-heavy or hash to a
+        still-resident partition.  While the chunk's unique candidates
+        would overflow the budget, demote half the resident partitions
+        (persistently — those partitions stay cold); once none remain,
+        admit only the heaviest-first sketch prefix that fits.  Returns the
+        admission mask and the EXACT number of new groups it creates (the
+        candidates all missed the probe, so uniques == new tickets)."""
+        budget, count = self._budget, self._host_count
+        heavy = self._sketch.heavy_array()
+        miss = valid & ~hits
+        while True:
+            is_heavy = np.isin(keys_np, heavy) if heavy.size else np.zeros_like(valid)
+            if self._resident.any():
+                cand = miss & (is_heavy | self._resident[pids])
+            else:
+                cand = miss & is_heavy
+            n_new = int(np.unique(keys_np[cand]).size)
+            if count + n_new <= budget:
+                return cand, n_new
+            if self._resident.any():
+                res = np.flatnonzero(self._resident)
+                self._resident[res[len(res) // 2:]] = False
+            else:
+                heavy = heavy[: max(budget - count, 0)]
+
+    # -- finalize: second-pass streamed merge --------------------------------
+
+    def _partition_op(self, pid: int) -> GroupByOperator:
+        """Fresh operator for one partition's second pass, bound to the
+        partition's EXACT cardinality (known host-side from the spilled
+        keys) — it can neither overflow nor pause, and its table stays no
+        larger than the hot table whenever the partition's cardinality is
+        within the residency budget (the ≤2× device-memory gate)."""
+        p, ex = self._plan, self._plan.execution
+        card = int(np.unique(self._manager.partition_keys(pid)).size)
+        return GroupByOperator(
+            key_columns=["__key__"], aggs=list(p.aggs), max_groups=max(card, 1),
+            morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
+            use_kernel=ex.use_kernel, load_factor=ex.load_factor,
+            pipeline=ex.pipeline, raw_keys=True,
+            check_overflow=True, grow_bound=False,
+        )
+
+    def finalize(self) -> Table:
+        op = self._op
+        parts = self._manager.partitions()
+        if not parts:
+            # nothing spilled yet: bit-identical to the plain concurrent scan
+            return op.finalize()
+        count_hot = int(jax.device_get(op._table.count))
+        assert count_hot == self._host_count, (count_hot, self._host_count)
+        kbt_hot = np.asarray(jax.device_get(op._table.key_by_ticket))[:count_hot]
+        # copies of the hot accumulators — the scatter-merge below must not
+        # disturb the live operator (finalize is a pure read)
+        merged = dict(zip(op._state.specs, op._state.accs))
+        union_keys = [kbt_hot]
+        fresh_accs: dict = {spec: [] for spec in self._specs}
+        peak = self._residency_bytes
+        for pid in parts:
+            pop = self._partition_op(pid)
+            for chunk in self._manager.readmit(pid).chunks():
+                pop.consume(chunk)
+            peak = max(peak, self._residency_bytes + self._device_bytes(pop))
+            t_hot = tk.lookup(op._table, pop._table.key_by_ticket)
+            kbt_p = np.asarray(jax.device_get(pop._table.key_by_ticket))
+            t_np = np.asarray(jax.device_get(t_hot))
+            valid_p = kbt_p != _EMPTY32
+            overlap = valid_p & (t_np >= 0)   # demoted-after-admission keys
+            fresh = valid_p & (t_np < 0)      # groups the device never held
+            t_merge = jnp.where(jnp.asarray(overlap), t_hot, -1)
+            for spec in self._specs:
+                acc_p = pop._state.get(*spec)
+                merged[spec] = up.scatter_update(
+                    merged[spec], t_merge, acc_p, kind=_MERGE_KIND[spec[1]]
+                )
+                if fresh.any():
+                    fresh_accs[spec].append(
+                        np.asarray(jax.device_get(acc_p))[fresh]
+                    )
+            if fresh.any():
+                union_keys.append(kbt_p[fresh])
+        self._peak_device_bytes = max(self._peak_device_bytes, peak)
+        keys_all = np.concatenate(union_keys)
+        total = int(keys_all.shape[0])
+        accs_all = {}
+        for spec in self._specs:
+            hot_np = np.asarray(jax.device_get(merged[spec]))[:count_hot]
+            accs_all[spec] = jnp.asarray(
+                np.concatenate([hot_np] + fresh_accs[spec])
+                if fresh_accs[spec] else hot_np
+            )
+        return build_result_table(
+            self._plan.aggs, lambda c, k: accs_all[(c, k)],
+            jnp.asarray(keys_all), total, total,
+        )
+
+    # -- telemetry -----------------------------------------------------------
+
+    def memory_stats(self) -> dict:
+        s = super().memory_stats()
+        s.update(self._manager.stats())
+        s["peak_retained_bytes"] = max(
+            s["peak_retained_bytes"], self._manager.spilled_bytes
+        )
+        s["residency_budget"] = self._budget
+        s["residency_bytes"] = self._residency_bytes
+        s["peak_device_table_bytes"] = self._peak_device_bytes
+        s["device_groups"] = self._host_count
+        s["resident_partitions"] = int(self._resident.sum())
+        return s
+
+
+__all__ = ["SpillExecutor", "SpillManager", "partition_of"]

@@ -27,6 +27,10 @@ Budgets ride the existing ``SaturationPolicy`` seam: a tenant with
 RAISE** — a budget is a hard capacity contract, so the offending query
 fails with ``GroupByOverflowError`` at its finalize while every other
 query keeps running (the scheduler isolates task failures per slot).
+A plan submitted with ``saturation="spill"`` keeps the budget honest the
+other way: the cap bounds its DEVICE residency while the cold tail spills
+to host (engine/spill.py), so the query completes with exact totals
+instead of failing.
 """
 from __future__ import annotations
 
@@ -123,6 +127,13 @@ class QueryHandle:
     def chunks_consumed(self) -> int:
         return self._stream.chunks_consumed
 
+    def stats(self) -> dict:
+        """This query's ingest + memory telemetry
+        (:meth:`repro.engine.plan_api.StreamHandle.stats`): chunk/row
+        counters, retention high-water marks, and spill accounting when the
+        plan runs out-of-core."""
+        return self._stream.stats()
+
     def snapshot(self):
         """Incremental per-query read: the groups this query has aggregated
         so far, without disturbing its stream (idempotent executor
@@ -160,7 +171,9 @@ class AggregationServer:
                    weight: int = 1, max_steps: int | None = None) -> None:
         """Per-tenant contract: ``weight`` quanta per round-robin turn,
         ``max_steps`` hard scheduling budget, ``max_groups`` hard per-query
-        cardinality cap (enforced through ``SaturationPolicy.RAISE``)."""
+        cardinality cap (enforced through ``SaturationPolicy.RAISE``; a
+        ``saturation="spill"`` plan instead treats the cap as its device
+        residency budget and completes exactly by spilling to host)."""
         self.scheduler.set_budget(
             tenant,
             TenantBudget(weight=weight, max_steps=max_steps, max_groups=max_groups),
@@ -179,6 +192,11 @@ class AggregationServer:
             budget.max_groups if plan.max_groups is None
             else min(plan.max_groups, budget.max_groups)
         )
+        if plan.saturation == SaturationPolicy.SPILL:
+            # A spilling query honors the budget as a device residency cap:
+            # the hot table stays within it and the cold tail goes to host,
+            # so the query completes exactly instead of raising.
+            return plan.with_(max_groups=capped)
         # A budget is a hard per-tenant contract: the capped plan must
         # surface saturation, not silently grow past it or truncate.
         return plan.with_(max_groups=capped, saturation=SaturationPolicy.RAISE)

@@ -1,0 +1,244 @@
+"""Out-of-core spill tests (``saturation="spill"``, engine/spill.py):
+spill ≡ oracle bit-exact across distributions, spill-under-streaming with
+mid-spill ``snapshot()``, forced tiny residency, the zero-spill fast path,
+server budgets that spill instead of raising, and the memory-telemetry
+surface (``StreamHandle.stats()``)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import groupby_oracle
+from repro.data.pipeline import IterableSource
+from repro.engine import (
+    AggSpec,
+    ExecutionPolicy,
+    GroupByOverflowError,
+    GroupByPlan,
+    SaturationPolicy,
+    Table,
+)
+
+RNG = np.random.default_rng(23)
+N = 4096
+CHUNK = 512
+BUDGET = 64  # device residency budget — far below every matrix cardinality
+
+
+def gen_keys(dist: str) -> np.ndarray:
+    if dist == "uniform":
+        return RNG.integers(0, 1000, size=N).astype(np.uint32)
+    if dist == "zipf":
+        return (RNG.zipf(1.3, size=N) % (N // 2)).astype(np.uint32)
+    assert dist == "unique"
+    return RNG.permutation(N).astype(np.uint32)
+
+
+def int_vals(n: int = N) -> np.ndarray:
+    # integer-valued f32: any summation order is exact below 2**24, so
+    # SUM comparisons against the oracle can demand bit equality
+    return RNG.integers(0, 100, size=n).astype(np.float32)
+
+
+def chunk_tables(keys, vals=None, chunk=CHUNK):
+    for i in range(0, len(keys), chunk):
+        cols = {"k": jnp.asarray(keys[i:i + chunk])}
+        if vals is not None:
+            cols["v"] = jnp.asarray(vals[i:i + chunk])
+        yield Table(cols)
+
+
+def table_map(out: Table, name: str) -> dict:
+    n = int(out["__num_groups__"][0])
+    return {int(k): float(v)
+            for k, v in zip(np.asarray(out["key"])[:n], np.asarray(out[name])[:n])}
+
+
+def oracle_map(keys, vals, kind="sum", max_groups=N):
+    ref = groupby_oracle(jnp.asarray(keys), None if vals is None else jnp.asarray(vals),
+                         kind=kind, max_groups=max_groups)
+    n = int(ref.num_groups)
+    return {int(k): float(v)
+            for k, v in zip(np.asarray(ref.keys)[:n], np.asarray(ref.values)[:n])}
+
+
+def spill_plan(budget=BUDGET, partitions=8, **kw) -> GroupByPlan:
+    kw.setdefault("aggs", (AggSpec("count"), AggSpec("sum", "v")))
+    return GroupByPlan(
+        keys=("k",), strategy="concurrent", max_groups=budget,
+        saturation=SaturationPolicy.SPILL, raw_keys=True,
+        execution=ExecutionPolicy(morsel_rows=256, spill_partitions=partitions),
+        **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# exactness matrix
+
+
+@pytest.mark.parametrize("dist", ["uniform", "zipf", "unique"])
+def test_spill_matches_oracle_matrix(dist):
+    """10–60× the residency budget in true cardinality: COUNT and SUM stay
+    bit-exact against the oracle — correctness never depends on how well
+    the hot/cold classifier guessed."""
+    keys, vals = gen_keys(dist), int_vals()
+    handle = spill_plan().stream(chunk_tables(keys, vals))
+    out = handle.result()
+    assert table_map(out, "count(*)") == oracle_map(keys, None, kind="count")
+    assert table_map(out, "sum(v)") == oracle_map(keys, vals, kind="sum")
+    stats = handle.stats()
+    assert stats["spilled_rows"] > 0
+    assert stats["device_groups"] <= BUDGET
+
+
+def test_spill_multi_agg_and_mean():
+    keys, vals = gen_keys("zipf"), int_vals()
+    plan = spill_plan(aggs=(AggSpec("count"), AggSpec("mean", "v"),
+                            AggSpec("min", "v")))
+    out = plan.collect(chunk_tables(keys, vals))
+    counts = oracle_map(keys, None, kind="count")
+    sums = oracle_map(keys, vals, kind="sum")
+    assert table_map(out, "count(*)") == counts
+    assert table_map(out, "min(v)") == oracle_map(keys, vals, kind="min")
+    assert table_map(out, "mean(v)") == pytest.approx(
+        {k: sums[k] / counts[k] for k in sums}, rel=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# streaming composition
+
+
+def test_spill_snapshot_midstream():
+    """snapshot() works mid-spill: idempotent, equal to the oracle over the
+    chunks consumed so far, and the stream keeps spilling afterwards."""
+    keys, vals = gen_keys("uniform"), int_vals()
+    handle = spill_plan().stream(chunk_tables(keys, vals))
+    handle.pump(4)
+    assert handle.stats()["spilled_rows"] > 0  # already spilling mid-stream
+    snap1, snap2 = handle.snapshot(), handle.snapshot()
+    assert table_map(snap1, "sum(v)") == table_map(snap2, "sum(v)")
+    half = 4 * CHUNK
+    assert table_map(snap1, "count(*)") == oracle_map(keys[:half], None, kind="count")
+    assert table_map(snap1, "sum(v)") == oracle_map(keys[:half], vals[:half], kind="sum")
+    out = handle.result()
+    assert table_map(out, "sum(v)") == oracle_map(keys, vals, kind="sum")
+
+
+def test_spill_forced_tiny_residency():
+    """A residency budget of 16 against ~1000 uniques: nearly everything
+    spills, totals stay exact."""
+    keys, vals = gen_keys("uniform"), int_vals()
+    handle = spill_plan(budget=16).stream(chunk_tables(keys, vals))
+    out = handle.result()
+    assert table_map(out, "count(*)") == oracle_map(keys, None, kind="count")
+    assert table_map(out, "sum(v)") == oracle_map(keys, vals, kind="sum")
+    stats = handle.stats()
+    assert stats["device_groups"] <= 16
+    assert stats["spilled_rows"] > N // 2
+
+
+def test_spill_zero_spill_matches_concurrent():
+    """Cardinality within the budget: nothing spills and the result is
+    bit-identical to the plain concurrent scan (same operator, same order)."""
+    keys = RNG.integers(0, 40, size=N).astype(np.uint32)
+    vals = int_vals()
+    handle = spill_plan(budget=256).stream(chunk_tables(keys, vals))
+    out = handle.result()
+    ref = spill_plan(budget=256).with_(saturation=SaturationPolicy.RAISE).collect(
+        chunk_tables(keys, vals)
+    )
+    np.testing.assert_array_equal(np.asarray(out["key"]), np.asarray(ref["key"]))
+    np.testing.assert_array_equal(np.asarray(out["sum(v)"]), np.asarray(ref["sum(v)"]))
+    stats = handle.stats()
+    assert stats["spilled_rows"] == 0 and stats["spilled_bytes"] == 0
+
+
+def test_spill_auto_strategy_resolves():
+    """strategy='auto' + saturation='spill' with no bound: the resolver
+    forces the concurrent hash pipeline and the estimated bound becomes the
+    residency budget — results stay exact."""
+    keys, vals = gen_keys("zipf"), int_vals()
+    plan = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("sum", "v"),), strategy="auto",
+        saturation=SaturationPolicy.SPILL, raw_keys=True,
+        execution=ExecutionPolicy(morsel_rows=256, spill_partitions=8),
+    )
+    out = plan.collect(chunk_tables(keys, vals))
+    assert table_map(out, "sum(v)") == oracle_map(keys, vals, kind="sum")
+
+
+def test_spill_rejects_incompatible_plans():
+    from repro.engine import make_executor
+
+    with pytest.raises(ValueError, match="does not support spilling"):
+        make_executor(spill_plan().with_(strategy="partitioned"))
+    with pytest.raises(ValueError, match="ticketing='hash'"):
+        make_executor(spill_plan().with_(
+            execution=ExecutionPolicy(ticketing="sort")
+        ))
+
+
+# ---------------------------------------------------------------------------
+# telemetry surface
+
+
+def test_stream_stats_dict():
+    keys, vals = gen_keys("uniform"), int_vals()
+    handle = spill_plan().stream(chunk_tables(keys, vals))
+    handle.result()
+    stats = handle.stats()
+    for field in ("chunks_consumed", "rows_consumed", "peak_buffered_chunks",
+                  "peak_retained_bytes", "spilled_rows", "spilled_bytes",
+                  "spilled_partitions", "partition_rows", "partition_bytes",
+                  "residency_budget", "residency_bytes",
+                  "peak_device_table_bytes", "device_groups"):
+        assert field in stats, field
+    assert stats["chunks_consumed"] == N // CHUNK
+    assert stats["rows_consumed"] == N
+    assert stats["peak_buffered_chunks"] == 0      # spill retains no chunks
+    assert stats["peak_retained_bytes"] == stats["spilled_bytes"] > 0
+    assert sum(stats["partition_rows"]) == stats["spilled_rows"]
+    assert stats["residency_bytes"] > 0
+    # a non-spilling executor reports the base dict through the same seam
+    base = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("count"),), strategy="concurrent",
+        max_groups=N, raw_keys=True,
+    ).stream(chunk_tables(keys))
+    base.result()
+    bstats = base.stats()
+    assert bstats["peak_buffered_chunks"] == 0
+    assert bstats["peak_retained_bytes"] == 0
+
+
+# ---------------------------------------------------------------------------
+# server composition: budgets spill instead of raising
+
+
+def test_server_budget_spills_instead_of_raising():
+    from repro.serve.query_server import AggregationServer
+
+    keys, vals = gen_keys("uniform"), int_vals()
+    server = AggregationServer(slots=4)
+    server.set_budget("alice", max_groups=48)
+
+    spilling = GroupByPlan(
+        keys=("k",), aggs=(AggSpec("sum", "v"),),
+        saturation=SaturationPolicy.SPILL, raw_keys=True,
+        execution=ExecutionPolicy(morsel_rows=256, spill_partitions=8),
+    )
+    capped = GroupByPlan(keys=("k",), aggs=(AggSpec("sum", "v"),), raw_keys=True)
+
+    h_spill = server.submit(
+        spilling, IterableSource(list(chunk_tables(keys, vals))), tenant="alice")
+    h_raise = server.submit(
+        capped, IterableSource(list(chunk_tables(keys, vals))), tenant="alice")
+
+    # the spilling query honors the 48-group budget as device residency and
+    # completes exactly; the plain query hits the hard RAISE contract
+    out = h_spill.result()
+    assert table_map(out, "sum(v)") == oracle_map(keys, vals, kind="sum")
+    stats = h_spill.stats()
+    assert stats["device_groups"] <= 48
+    assert stats["spilled_rows"] > 0
+    with pytest.raises(GroupByOverflowError):
+        h_raise.result()

@@ -340,23 +340,6 @@ def test_sharded_stream_multi_aggregate_grow():
     )
 
 
-def test_sharded_buffered_ingest_is_deprecated():
-    import jax
-
-    keys = gen_keys("uniform")
-    mesh = jax.make_mesh((1,), ("data",))
-    plan = GroupByPlan(
-        keys=("k",), aggs=(AggSpec("count"),), strategy="sharded",
-        max_groups=512, saturation=SaturationPolicy.UNCHECKED, raw_keys=True,
-        execution=ExecutionPolicy(mesh=mesh, axis="data",
-                                  sharded_ingest="buffered"),
-    )
-    with pytest.warns(DeprecationWarning, match="deprecated"):
-        handle = plan.stream(chunk_tables(keys))
-    out = handle.result()
-    assert table_map(out, "count(*)") == oracle_map(keys, None, kind="count")
-
-
 # ---------------------------------------------------------------------------
 # ChunkSource adapters
 
