@@ -34,7 +34,7 @@ import jax.numpy as jnp
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import N_ROWS, emit
+from benchmarks.common import N_ROWS, emit, gate, write_bench_json
 from repro.data.pipeline import ArraySource
 from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy
 
@@ -171,8 +171,12 @@ def run(n: int | None = None, json_path: str | None = None):
          f"slot handoff {'ok' if admit_ok else 'BROKEN'}")
 
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=2)
+        write_bench_json(json_path, "serve", results, gates={
+            "batched_speedup": gate(results["batched_speedup"], ">=", 1.5),
+            "bit_identical": gate(results["bit_identical"], "==", True),
+            "cancel_admits_queued": gate(
+                results["cancel_admits_queued"], "==", True),
+        })
     return results
 
 

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import N_ROWS, emit, time_fn
+from benchmarks.common import N_ROWS, emit, gate, time_fn, write_bench_json
 from repro.core import groupby_oracle
 from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy, Table
 
@@ -159,8 +159,11 @@ def run(n: int | None = None, json_path: str | None = None):
     results["exact"] = all_exact
     results["gate_pass"] = bool(gate_pass)
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=2)
+        write_bench_json(json_path, "spill", results, gates={
+            "device_bytes_ratio_10x": gate(
+                ten["device_bytes_ratio"], "<=", 2.0),
+            "exact": gate(all_exact, "==", True),
+        })
     return results
 
 

@@ -26,14 +26,26 @@ import argparse
 import json
 import os
 import sys
+import time
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import N_ROWS, emit, gen_keys, run_in_devices, time_fn
+from benchmarks.common import (
+    N_ROWS,
+    emit,
+    gate,
+    gen_keys,
+    run_in_devices,
+    time_fn,
+    write_bench_json,
+)
 from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, SaturationPolicy, Table
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 CHUNKS = 8
 
@@ -90,7 +102,8 @@ def _staged_source(n, chunks, seed=5):
         yield Table({"k": jnp.asarray(k), "v": jnp.asarray(v)})
 
 
-def run(n: int | None = None, json_path: str | None = None):
+def run(n: int | None = None, json_path: str | None = None,
+        trace_path: str | None = None):
     n = n or N_ROWS
     results = {}
     rng = np.random.default_rng(3)
@@ -132,6 +145,91 @@ def run(n: int | None = None, json_path: str | None = None):
     )
     emit("stream_overlap_speedup", results["overlap_speedup"], ">1 = overlap pays")
 
+    # --- instrumentation overhead A/B (the obs overhead guard) ------------
+    # Same plan, same stream, three arms: obs off (baseline), obs fully on
+    # (device event counters + span tracing + registry publishing), obs off
+    # again (the no-op fast path must trace the IDENTICAL jitted program).
+    # Executors resolve the instrument flag at construction, so flipping the
+    # global switch between collect() calls is the whole A/B.
+    # Arms are INTERLEAVED round-robin (off_a, on, off_b per round) so host
+    # load drift hits every arm equally instead of landing in the ratio —
+    # executors resolve the instrument flag at construction, so flipping the
+    # global switch between collect() calls selects the arm.
+    stream_fn = lambda: plan.collect(_chunked(keys, vals)).columns
+
+    def _sample(instrumented: bool) -> float:
+        if instrumented:
+            obs_metrics.enable()
+            obs_trace.enable()
+        t0 = time.perf_counter()
+        jax.block_until_ready(stream_fn())
+        dt = time.perf_counter() - t0
+        obs_trace.disable()
+        obs_metrics.disable()
+        return dt
+
+    assert not obs_metrics.enabled()
+    for instrumented in (False, True, True):  # warm/compile both programs
+        _sample(instrumented)
+    arms = {"off_a": [], "on": [], "off_b": []}
+    for _ in range(7):
+        arms["off_a"].append(_sample(False))
+        arms["on"].append(_sample(True))
+        arms["off_b"].append(_sample(False))
+    # min, not median: the ratio of two IDENTICAL programs (off_a vs off_b)
+    # measures pure host noise, and min is the stable latency estimator —
+    # medians of interleaved arms still drifted ~6% on shared CI boxes
+    us_off_a, us_on, us_off_b = (
+        float(min(arms[a]) * 1e6) for a in ("off_a", "on", "off_b"))
+    if trace_path:
+        obs_metrics.enable()
+        obs_trace.enable()
+        # one clean instrumented pass so the artifact is a single stream's
+        # spans, not the timing loop's pile-up
+        obs_trace.clear()
+        handle = plan.stream(_chunked(keys, vals))
+        handle.result()
+        obs_trace.save(trace_path)
+        emit("stream_trace_artifact", len(obs_trace.events()),
+             f"chrome-trace events -> {trace_path}")
+        obs_trace.disable()
+        obs_metrics.disable()
+    us_off = (us_off_a + us_off_b) / 2.0
+    results["obs_off_us"] = us_off
+    results["obs_on_us"] = us_on
+    results["obs_overhead_enabled"] = us_on / max(us_off, 1e-9)
+    results["obs_overhead_disabled"] = us_off_b / max(us_off_a, 1e-9)
+    emit("stream_obs_off", us_off, "uninstrumented baseline")
+    emit("stream_obs_on", us_on, "device counters + tracing + registry")
+    emit("stream_obs_overhead", results["obs_overhead_enabled"],
+         "≤1.05 gate " + (
+             "PASS" if results["obs_overhead_enabled"] <= 1.05 else "FAIL"))
+
+    # --- §Operational: probe-length histogram + load factor by skew -------
+    # The same instrumented plan over uniform vs zipfian keys: the histogram
+    # shifts right as clustering grows probe chains — the paper's open-
+    # addressing story, now measured from inside the jitted scan.
+    obs_metrics.enable()
+    operational = {}
+    for dist in ("uniform", "zipf"):
+        dkeys = jnp.asarray(gen_keys(n, "low", dist))
+        handle = plan.stream(_chunked(dkeys, vals))
+        handle.result()
+        dev = handle.stats()["device"]
+        operational[dist] = {
+            "probe_hist": dev["probe_hist"],
+            "probe_steps": dev["probe_steps"],
+            "rows": dev["rows"],
+            "table_load_factor": dev["table_load_factor"],
+            "num_groups": dev["num_groups"],
+        }
+        mean_probe = dev["probe_steps"] / max(dev["rows"], 1)
+        emit(f"stream_probe_mean_{dist}", mean_probe,
+             f"load_factor={dev['table_load_factor']:.3f} "
+             f"hist={dev['probe_hist']}")
+    obs_metrics.disable()
+    results["operational"] = operational
+
     # --- streaming sharded ingest (8 simulated devices) -------------------
     try:
         res = run_in_devices(
@@ -152,15 +250,27 @@ def run(n: int | None = None, json_path: str | None = None):
     if json_path:
         results["n_rows"] = n
         results["chunks"] = CHUNKS
-        with open(json_path, "w") as f:
-            json.dump(results, f, indent=2)
+        # both gates carry the same ±5% host-noise headroom: off_a vs off_b
+        # run the IDENTICAL program, so their ratio is pure measurement
+        # noise (±4-6% even on interleaved mins on shared boxes) — the
+        # deterministic "disabled = zero overhead" guarantee is enforced by
+        # tests/test_obs.py (byte-identical scan, nothing emitted), and
+        # this timing arm is the smoke check on top
+        write_bench_json(json_path, "stream", results, gates={
+            "obs_overhead_enabled": gate(
+                results["obs_overhead_enabled"], "<=", 1.05),
+            "obs_overhead_disabled": gate(
+                results["obs_overhead_disabled"], "<=", 1.05),
+        })
     return results
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, help="write BENCH_stream.json here")
+    ap.add_argument("--trace", default=None,
+                    help="write a Perfetto-loadable chrome trace JSON here")
     ap.add_argument("--rows", type=int, default=None)
     args = ap.parse_args()
     print("name,us_per_call,derived", flush=True)
-    run(n=args.rows, json_path=args.json)
+    run(n=args.rows, json_path=args.json, trace_path=args.trace)

@@ -1,0 +1,149 @@
+"""Perf-trajectory gate: compare fresh ``BENCH_*.json`` artifacts against
+the committed baselines in ``benchmarks/baselines/``.
+
+CI runs the benches, then::
+
+    python benchmarks/check_regression.py BENCH_stream.json BENCH_serve.json \
+        BENCH_spill.json
+
+Policy — built for heterogeneous CI machines, so only machine-independent
+numbers gate hard:
+
+  * every ``gates`` entry in the CURRENT artifact must pass (ratios and
+    booleans: batched speedup, obs overhead, spill device-bytes ratio,
+    bit-identical results) — these do not depend on the machine;
+  * gated ratio metrics must also not regress past ``RATIO_TOLERANCE``
+    relative to the committed baseline (direction taken from the gate's
+    comparison operator);
+  * absolute ``*_us`` timings only fail past ``TIMING_TOLERANCE`` (3×) —
+    below that they warn, because wall-clock across CI hosts is noise;
+  * a missing baseline (the first landing) soft-warns and exits 0 —
+    commit the fresh artifact as the baseline to arm the gate.
+
+``--update`` copies the current artifacts over the baselines (run locally,
+commit the result).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "baselines")
+RATIO_TOLERANCE = 1.5   # gated ratios may drift this factor vs baseline
+TIMING_TOLERANCE = 3.0  # absolute µs timings: only a blow-up this large fails
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+
+
+def check_artifact(cur_path: str, baseline_dir: str) -> tuple[list, list]:
+    """Returns (failures, warnings) — lists of human-readable strings."""
+    failures, warnings = [], []
+    cur = _load(cur_path)
+    if cur is None:
+        failures.append(f"{cur_path}: missing or unparseable artifact")
+        return failures, warnings
+    name = os.path.basename(cur_path)
+    bench = cur.get("bench", name)
+
+    # 1. the artifact's own gates: machine-independent, always hard
+    for gname, g in (cur.get("gates") or {}).items():
+        if not g.get("pass", False):
+            failures.append(
+                f"{bench}: gate {gname} FAILED "
+                f"({g.get('value')} {g.get('op')} {g.get('threshold')})"
+            )
+
+    base = _load(os.path.join(baseline_dir, name))
+    if base is None:
+        warnings.append(
+            f"{bench}: no committed baseline ({name}) — soft pass; commit "
+            "this artifact to benchmarks/baselines/ to arm the gate"
+        )
+        return failures, warnings
+
+    # 2. gated ratios vs baseline: direction from the gate's operator
+    base_gates = base.get("gates") or {}
+    for gname, g in (cur.get("gates") or {}).items():
+        bg = base_gates.get(gname)
+        if bg is None or not isinstance(g.get("value"), (int, float)):
+            continue
+        v, bv = float(g["value"]), float(bg.get("value", g["value"]))
+        if isinstance(g["value"], bool) or bv <= 0:
+            continue
+        if g.get("op") == ">=" and v < bv / RATIO_TOLERANCE:
+            failures.append(
+                f"{bench}: {gname} regressed {bv:.3f} -> {v:.3f} "
+                f"(tolerance /{RATIO_TOLERANCE})"
+            )
+        elif g.get("op") == "<=" and v > bv * RATIO_TOLERANCE:
+            failures.append(
+                f"{bench}: {gname} regressed {bv:.3f} -> {v:.3f} "
+                f"(tolerance x{RATIO_TOLERANCE})"
+            )
+
+    # 3. absolute timings: loose, warn first
+    base_metrics = base.get("metrics") or {}
+    for key, v in (cur.get("metrics") or {}).items():
+        if not key.endswith("_us") or not isinstance(v, (int, float)):
+            continue
+        bv = base_metrics.get(key)
+        if not isinstance(bv, (int, float)) or bv <= 0:
+            continue
+        ratio = float(v) / float(bv)
+        if ratio > TIMING_TOLERANCE:
+            failures.append(
+                f"{bench}: {key} blew up {bv:.0f}us -> {v:.0f}us "
+                f"({ratio:.1f}x, tolerance {TIMING_TOLERANCE}x)"
+            )
+        elif ratio > TIMING_TOLERANCE / 2:
+            warnings.append(
+                f"{bench}: {key} drifted {bv:.0f}us -> {v:.0f}us ({ratio:.1f}x)"
+            )
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="+", help="fresh BENCH_*.json paths")
+    ap.add_argument("--baselines", default=BASELINE_DIR,
+                    help="committed baseline directory")
+    ap.add_argument("--update", action="store_true",
+                    help="copy the current artifacts over the baselines")
+    args = ap.parse_args(argv)
+
+    if args.update:
+        os.makedirs(args.baselines, exist_ok=True)
+        for path in args.artifacts:
+            dst = os.path.join(args.baselines, os.path.basename(path))
+            shutil.copyfile(path, dst)
+            print(f"baseline updated: {dst}")
+        return 0
+
+    all_failures, all_warnings = [], []
+    for path in args.artifacts:
+        failures, warnings = check_artifact(path, args.baselines)
+        all_failures += failures
+        all_warnings += warnings
+    for w in all_warnings:
+        print(f"WARN  {w}")
+    for f in all_failures:
+        print(f"FAIL  {f}")
+    if all_failures:
+        print(f"check_regression: {len(all_failures)} failure(s)")
+        return 1
+    print(f"check_regression: OK ({len(args.artifacts)} artifact(s), "
+          f"{len(all_warnings)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -83,3 +83,50 @@ def run_in_devices(k: int, code: str, env_extra=None) -> dict:
 
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# -- unified gate schema (obs-backed) ----------------------------------------
+#
+# Every bench that writes a BENCH_*.json artifact routes it through
+# write_bench_json: legacy top-level keys stay where report.py reads them,
+# and the same numbers land under "metrics" plus explicit "gates" entries —
+# the machine-checkable schema benchmarks/check_regression.py compares
+# against the committed baselines.  When the obs registry is enabled the
+# run's counter snapshot rides along under "obs".
+
+_GATE_OPS = {
+    "<=": lambda v, t: v <= t,
+    ">=": lambda v, t: v >= t,
+    "==": lambda v, t: v == t,
+}
+
+
+def gate(value, op: str, threshold):
+    """One acceptance gate: ``{"value", "op", "threshold", "pass"}``."""
+    return {
+        "value": value,
+        "op": op,
+        "threshold": threshold,
+        "pass": bool(_GATE_OPS[op](value, threshold)),
+    }
+
+
+def write_bench_json(path: str, bench: str, results: dict,
+                     gates: dict | None = None) -> dict:
+    """Write one bench artifact in the ``repro.obs/v1`` schema (legacy flat
+    keys preserved at the top level) and return the payload."""
+    from repro.obs import metrics as obs_metrics
+
+    payload = dict(results)
+    payload["bench"] = bench
+    payload["schema"] = "repro.obs/v1"
+    payload["metrics"] = {
+        k: v for k, v in results.items()
+        if isinstance(v, (int, float, bool)) and not isinstance(v, str)
+    }
+    payload["gates"] = gates or {}
+    if obs_metrics.enabled():
+        payload["obs"] = obs_metrics.snapshot()
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return payload

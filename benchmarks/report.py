@@ -7,9 +7,12 @@ Prints markdown: §Dry-run (memory + collectives per cell, both meshes),
 §Streaming (bench_stream's BENCH_stream.json artifact: stream-vs-one-shot,
 ingest-overlap and streaming-sharded numbers, incl. peak RSS),
 §Serving (bench_serve's BENCH_serve.json artifact: batched-vs-sequential
-multi-query dispatch, fairness clocks, cancellation latency) and §Spill
+multi-query dispatch, fairness clocks, cancellation latency), §Spill
 (bench_spill's BENCH_spill.json artifact: out-of-core cardinality sweep,
-exactness, device-bytes gate, overhead vs the enough-memory baseline).
+exactness, device-bytes gate, overhead vs the enough-memory baseline) and
+§Operational (bench_stream's device-side scan counters: probe-length
+histogram and load factor, uniform vs zipfian keys, plus the
+instrumentation-overhead gate).
 """
 from __future__ import annotations
 
@@ -137,12 +140,41 @@ def spill_table(path):
               f"(baseline {r['inmemory_us']/1e3:.1f} ms) | | | |")
 
 
+_PROBE_LABELS = ("1", "2", "3", "4", "5-8", "9-16", "17-32", "33+")
+
+
+def operational_table(path):
+    with open(path) as f:
+        r = json.load(f)
+    op = r.get("operational")
+    if not op:
+        print("(no operational counters in artifact — rerun bench_stream)")
+        return
+    print("Probe-length histogram per committed row (device-side counters "
+          "from inside the jitted scan):\n")
+    print("| distribution | " + " | ".join(_PROBE_LABELS)
+          + " | mean probe | load factor | groups |")
+    print("|---|" + "---|" * (len(_PROBE_LABELS) + 3))
+    for dist, cell in op.items():
+        hist = cell["probe_hist"]
+        total = max(sum(hist), 1)
+        row = " | ".join(f"{100 * h / total:.1f}%" for h in hist)
+        mean = cell["probe_steps"] / max(cell["rows"], 1)
+        print(f"| {dist} | {row} | {mean:.2f} "
+              f"| {cell['table_load_factor']:.3f} | {cell['num_groups']} |")
+    if "obs_overhead_enabled" in r:
+        print(f"\nInstrumentation overhead: "
+              f"{(r['obs_overhead_enabled'] - 1) * 100:.1f}% enabled "
+              f"(≤5% gate), "
+              f"{(r['obs_overhead_disabled'] - 1) * 100:.2f}% disabled.")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--section", default="both",
                     choices=["dryrun", "roofline", "streaming", "serving",
-                             "spill", "both"])
+                             "spill", "operational", "both"])
     ap.add_argument("--stream-json", default="BENCH_stream.json",
                     help="bench_stream artifact for §Streaming")
     ap.add_argument("--serve-json", default="BENCH_serve.json",
@@ -170,6 +202,10 @@ def main():
     if args.section in ("spill", "both") and os.path.exists(args.spill_json):
         print("### Out-of-core spill (bench_spill)\n")
         spill_table(args.spill_json)
+        print()
+    if args.section in ("operational", "both") and os.path.exists(args.stream_json):
+        print("### Operational (device-side scan counters)\n")
+        operational_table(args.stream_json)
 
 
 if __name__ == "__main__":

@@ -114,7 +114,8 @@ def make_sharded_carry(ndev: int, max_local: int, specs,
 
 
 def make_sharded_consume_step(mesh, axis: str, *, update: str,
-                              load_factor: float, checked: bool):
+                              load_factor: float, checked: bool,
+                              collect_events: bool = False):
     """Build the jitted per-chunk consume step: shard_map over the mesh,
     each device folding its (num_morsels, morsel_rows) slice of the chunk
     into its carried table + accumulator with an inner ``lax.scan`` — the
@@ -133,11 +134,18 @@ def make_sharded_consume_step(mesh, axis: str, *, update: str,
     saturated table or the local bound drop with only the sticky per-device
     ``ovf`` flag recording the loss (read once at finalize by the
     raise policy, never by unchecked).
+
+    ``collect_events=True`` threads a per-device ``(ndev, EVENT_VEC_LEN)``
+    int32 event vector (obs.metrics layout) as an extra step input/output —
+    ``step(carry, km, vm, start, events)`` → ``(carry, halts, events)`` —
+    accumulated device-side by the SAME shared pause body, read back only at
+    finalize (zero extra syncs).  Default off: the step signature and the
+    traced program are unchanged.
     """
     update_fn = up.get_update_fn(update)
 
-    def local(keys, tickets, kbt, count, ovf, acc, km, vm, start):
-        from repro.engine.groupby import make_pause_scan_body
+    def local(keys, tickets, kbt, count, ovf, acc, km, vm, start, *maybe_ev):
+        from repro.engine.groupby import accumulate_scan_events, make_pause_scan_body
 
         table = tk.TicketTable(
             keys[0], tickets[0], kbt[0], count[0], ovf[0]
@@ -146,6 +154,7 @@ def make_sharded_consume_step(mesh, axis: str, *, update: str,
         km0 = km[0]
         vm0 = {c: v[0] for c, v in vm.items()}
         st = start[0]
+        ev0 = maybe_ev[0][0] if collect_events else None
         capacity = table.capacity
         threshold = int(load_factor * capacity)
         bound_slack = table.max_groups - km0.shape[1]
@@ -153,49 +162,86 @@ def make_sharded_consume_step(mesh, axis: str, *, update: str,
 
         if not checked:
             def body(carry, xs):
-                table, lacc = carry
+                if collect_events:
+                    table, lacc, ev = carry
+                else:
+                    table, lacc = carry
                 k, v = xs
-                tks, table = tk.get_or_insert(table, k)
+                if collect_events:
+                    tks, table, probe_len = tk.get_or_insert(
+                        table, k, count_probes=True
+                    )
+                else:
+                    tks, table = tk.get_or_insert(table, k)
                 dropped = jnp.any((tks < 0) & (k != jnp.uint32(EMPTY_KEY)))
                 table = table._replace(overflowed=table.overflowed | dropped)
                 lacc = up.update_agg_state(lacc, tks, v, update_fn)
+                if collect_events:
+                    ev = accumulate_scan_events(
+                        ev, k, probe_len, jnp.ones((), jnp.bool_), dropped,
+                        jnp.zeros((), jnp.bool_),
+                    )
+                    return (table, lacc, ev), jnp.zeros((), jnp.bool_)
                 return (table, lacc), jnp.zeros((), jnp.bool_)
 
-            (table, lacc), halts = jax.lax.scan(body, (table, lacc), (km0, vm0))
+            if collect_events:
+                (table, lacc, ev0), halts = jax.lax.scan(
+                    body, (table, lacc, ev0), (km0, vm0)
+                )
+            else:
+                (table, lacc), halts = jax.lax.scan(body, (table, lacc), (km0, vm0))
         else:
             body = make_pause_scan_body(
                 st, threshold, bound_slack,
                 lambda lacc, tks, v: up.update_agg_state(lacc, tks, v, update_fn),
+                count_events=collect_events,
             )
-            (table, lacc, _), halts = jax.lax.scan(
-                body, (table, lacc, jnp.zeros((), jnp.bool_)), (idxs, km0, vm0)
-            )
-        return (
+            if collect_events:
+                (table, lacc, _, ev0), halts = jax.lax.scan(
+                    body, (table, lacc, jnp.zeros((), jnp.bool_), ev0),
+                    (idxs, km0, vm0),
+                )
+            else:
+                (table, lacc, _), halts = jax.lax.scan(
+                    body, (table, lacc, jnp.zeros((), jnp.bool_)), (idxs, km0, vm0)
+                )
+        out = (
             table.keys[None], table.tickets[None], table.key_by_ticket[None],
             table.count[None], table.overflowed[None],
             jax.tree_util.tree_map(lambda x: x[None], lacc), halts[None],
         )
+        if collect_events:
+            out = out + (ev0[None],)
+        return out
 
+    in_specs = (
+        P(axis, None), P(axis, None), P(axis, None), P(axis), P(axis),
+        P(axis, None), P(axis, None, None), P(axis, None, None), P(axis),
+    )
+    out_specs = (
+        P(axis, None), P(axis, None), P(axis, None), P(axis), P(axis),
+        P(axis, None), P(axis, None),
+    )
+    if collect_events:
+        in_specs = in_specs + (P(axis, None),)
+        out_specs = out_specs + (P(axis, None),)
     fn = shard_map(
-        local,
-        mesh=mesh,
-        in_specs=(
-            P(axis, None), P(axis, None), P(axis, None), P(axis), P(axis),
-            P(axis, None), P(axis, None, None), P(axis, None, None), P(axis),
-        ),
-        out_specs=(
-            P(axis, None), P(axis, None), P(axis, None), P(axis), P(axis),
-            P(axis, None), P(axis, None),
-        ),
+        local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )
     jitted = jax.jit(fn)
 
-    def step(carry: ShardedCarry, km, vm, start):
-        keys, tickets, kbt, count, ovf, acc, halts = jitted(
+    def step(carry: ShardedCarry, km, vm, start, events=None):
+        args = (
             carry.keys, carry.tickets, carry.kbt, carry.count, carry.ovf,
             carry.acc, km, vm, start,
         )
+        if collect_events:
+            keys, tickets, kbt, count, ovf, acc, halts, events = jitted(
+                *args, events
+            )
+            return ShardedCarry(keys, tickets, kbt, count, ovf, acc), halts, events
+        keys, tickets, kbt, count, ovf, acc, halts = jitted(*args)
         return ShardedCarry(keys, tickets, kbt, count, ovf, acc), halts
 
     return step

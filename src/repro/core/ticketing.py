@@ -79,13 +79,21 @@ def make_table(capacity: int, max_groups: int | None = None) -> TicketTable:
     )
 
 
-def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0):
+def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0,
+                  count_probes: bool = False):
     """Vectorized GET_OR_INSERT over a morsel of keys (paper Algorithm 1).
 
     Returns ``(tickets, new_table)`` where ``tickets`` is int32 of the same
     shape as ``keys`` holding the 0-based ticket of each key.  Rows whose key
     equals EMPTY_KEY get ticket -1 (the paper returns the sentinel 0; we keep
     sentinel handling out-of-band so downstream masks are explicit).
+
+    ``count_probes=True`` additionally threads a per-lane probe-length
+    counter (number of slot inspections until the lane resolved; 0 for
+    sentinel lanes, the loop bound for saturated lanes) and returns
+    ``(tickets, new_table, probe_len)``.  The counter rides the existing
+    while-loop carry, so enabling it adds no extra passes; the default
+    ``False`` path traces exactly as before.
 
     The loop invariant mirrors Algorithm 1 exactly:
       * occupied slot with matching key  → fast-path lookup hit;
@@ -122,7 +130,12 @@ def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0):
         return jnp.any(active) & (rounds < max_rounds)
 
     def body(state):
-        tkeys, ttks, kbt, slot, active, out, count, rounds = state
+        if count_probes:
+            tkeys, ttks, kbt, slot, active, out, count, rounds, probe_len = state
+            # Each active lane inspects exactly one slot per iteration.
+            probe_len = probe_len + active.astype(jnp.int32)
+        else:
+            tkeys, ttks, kbt, slot, active, out, count, rounds = state
         probed_key = jnp.take(tkeys, slot)
         probed_tk = jnp.take(ttks, slot)
 
@@ -167,6 +180,8 @@ def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0):
         out = jnp.where(won, new_ticket, out)
         active = active & ~won
         count = count + jnp.sum(won.astype(jnp.int32))
+        if count_probes:
+            return tkeys, ttks, kbt, slot, active, out, count, rounds + 1, probe_len
         return tkeys, ttks, kbt, slot, active, out, count, rounds + 1
 
     init = (
@@ -179,11 +194,20 @@ def get_or_insert(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0):
         table.count,
         jnp.zeros((), dtype=jnp.int32),
     )
-    tkeys, ttks, kbt, _, _, out, count, _ = jax.lax.while_loop(cond, body, init)
+    if count_probes:
+        init = init + (jnp.zeros((n,), dtype=jnp.int32),)
+        tkeys, ttks, kbt, _, _, out, count, _, probe_len = jax.lax.while_loop(
+            cond, body, init
+        )
+    else:
+        tkeys, ttks, kbt, _, _, out, count, _ = jax.lax.while_loop(cond, body, init)
     # Unresolved lanes (saturated table) still have out == 0 → ticket -1.
     tickets = jnp.where(valid & (out > 0), out - 1, -1).reshape(keys.shape)
     overflowed = table.overflowed | (count > table.max_groups)
-    return tickets, TicketTable(tkeys, ttks, kbt, count, overflowed)
+    new_table = TicketTable(tkeys, ttks, kbt, count, overflowed)
+    if count_probes:
+        return tickets, new_table, probe_len.reshape(keys.shape)
+    return tickets, new_table
 
 
 def lookup(table: TicketTable, keys: jnp.ndarray, *, seed: int = 0) -> jnp.ndarray:

@@ -57,10 +57,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import adaptive
+from repro.core import adaptive, resize
 from repro.core import ticketing as tk
 from repro.core import updates as up
 from repro.core.hashing import EMPTY_KEY, table_capacity
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.engine.columns import Table, chunk_key_column, combine_keys
 from repro.engine.groupby import (
     GroupByOperator,
@@ -127,6 +129,15 @@ def make_executor(plan: GroupByPlan):
 # shared helpers
 
 
+def _instrument(plan: GroupByPlan) -> bool:
+    """Resolve the per-plan instrumentation flag: an explicit
+    ``ExecutionPolicy.instrument`` wins; ``None`` follows the global
+    ``obs.metrics`` enable flag (so ``metrics.enable()`` turns on in-scan
+    event collection for every plan built afterwards)."""
+    ins = plan.execution.instrument
+    return obs_metrics.enabled() if ins is None else bool(ins)
+
+
 class _ExecutorBase:
     """Default streaming protocol: executors without their own async seam
     consume synchronously (``consume_async`` degenerates), and executors
@@ -134,6 +145,7 @@ class _ExecutorBase:
 
     peak_buffered_chunks = 0  # chunks retained beyond the in-flight window
     peak_retained_bytes = 0   # host bytes retained beyond the in-flight window
+    strategy_label = "?"      # labeled-series key for registry publishing
 
     def open(self) -> None:
         pass
@@ -153,6 +165,70 @@ class _ExecutorBase:
             "peak_buffered_chunks": self.peak_buffered_chunks,
             "peak_retained_bytes": self.peak_retained_bytes,
         }
+
+    # -- unified observability schema ---------------------------------------
+
+    def device_table_bytes(self) -> int:
+        """Current device footprint of the carried table/accumulator state
+        (0 for executors with no carried device table)."""
+        return 0
+
+    def event_counts(self) -> dict | None:
+        """Merged device+host event counters, or None when the executor is
+        not instrumented (so ``stats()`` never forces a device sync on an
+        uninstrumented stream)."""
+        return None
+
+    def stats(self) -> dict:
+        """THE unified executor stats schema: the ``memory_stats()`` keys
+        stay at the top level (compat view), plus nested ``memory`` /
+        ``device`` sections; instrumented executors add their in-scan event
+        counters under ``device`` and publish them (delta-based) into the
+        ``obs.metrics`` registry."""
+        mem = self.memory_stats()
+        out = dict(mem)
+        out["schema"] = "repro.obs/v1"
+        out["strategy"] = self.strategy_label
+        out["memory"] = {
+            "peak_buffered_chunks": mem.get("peak_buffered_chunks", 0),
+            "peak_retained_bytes": mem.get("peak_retained_bytes", 0),
+        }
+        dev = {"device_table_bytes": self.device_table_bytes()}
+        ev = self.event_counts()
+        if ev is not None:
+            dev.update(ev)
+            self.publish(ev)
+        out["device"] = dev
+        return out
+
+    def publish(self, ev: dict | None = None) -> None:
+        """Push the executor's counters into the process-wide registry as
+        labeled series (``strategy=...``).  Delta-based, so idempotent
+        surfaces (``stats``/``finalize``/``snapshot``) never double-count;
+        a no-op while the registry is disabled."""
+        if not obs_metrics.enabled():
+            return
+        if ev is None:
+            ev = self.event_counts()
+        if ev is None:
+            return
+        pub = getattr(self, "_obs_publisher", None)
+        if pub is None:
+            pub = obs_metrics.EventPublisher(strategy=self.strategy_label)
+            self._obs_publisher = pub
+        gauges = ("table_capacity", "table_load_factor", "num_groups")
+        totals = {
+            f"groupby.{k}": v for k, v in ev.items()
+            if k not in gauges and isinstance(v, (int, float))
+        }
+        if "probe_hist" in ev:
+            totals["groupby.probe_len"] = ev["probe_hist"]
+        pub.publish(totals)
+        for g in gauges:
+            if g in ev:
+                obs_metrics.gauge(
+                    f"groupby.{g}", strategy=self.strategy_label
+                ).set(ev[g])
 
 
 def _chunk_keys_values(plan: GroupByPlan, chunk: Table):
@@ -281,6 +357,19 @@ class _ResolvingExecutor(_ExecutorBase):
             else super().memory_stats()
         )
 
+    @property
+    def strategy_label(self) -> str:
+        return self._inner.strategy_label if self._inner else "auto"
+
+    def device_table_bytes(self) -> int:
+        return self._inner.device_table_bytes() if self._inner else 0
+
+    def event_counts(self):
+        return self._inner.event_counts() if self._inner else None
+
+    def stats(self) -> dict:
+        return self._inner.stats() if self._inner else super().stats()
+
     def _sample_keys(self, chunk: Table) -> jnp.ndarray:
         head = Table({k: v[: self.SAMPLE_ROWS] for k, v in chunk.columns.items()})
         keys, _ = chunk_key_column(head, self._plan.keys, self._plan.raw_keys)
@@ -351,6 +440,8 @@ class _ScanExecutor(_ExecutorBase):
     resume at the paused morsel), so a misestimated bound recovers without
     replaying the stream."""
 
+    strategy_label = "concurrent"
+
     def __init__(self, plan: GroupByPlan):
         self._plan = plan
         p, ex = plan, plan.execution
@@ -361,6 +452,7 @@ class _ScanExecutor(_ExecutorBase):
             pipeline=ex.pipeline, capacity=ex.capacity, raw_keys=p.raw_keys,
             check_overflow=p.saturation != SaturationPolicy.UNCHECKED,
             grow_bound=p.saturation == SaturationPolicy.GROW,
+            collect_events=_instrument(plan),
         )
 
     def consume(self, chunk: Table) -> None:
@@ -373,7 +465,17 @@ class _ScanExecutor(_ExecutorBase):
         self._op.poll(token)
 
     def finalize(self) -> Table:
-        return self._op.finalize()
+        out = self._op.finalize()
+        self.publish()
+        return out
+
+    def device_table_bytes(self) -> int:
+        return resize.table_nbytes(self._op._table) + sum(
+            int(a.nbytes) for a in self._op._state.accs
+        )
+
+    def event_counts(self):
+        return self._op.event_counts() if self._op.collect_events else None
 
 
 # ---------------------------------------------------------------------------
@@ -399,8 +501,12 @@ def batch_signature(plan: GroupByPlan):
     story, and sort/direct ticketing does not carry a probe table.  Two
     plans with the same signature produce bit-identical per-query results
     under batched stepping because each fused lane IS the sequential scan
-    body (same op order, same scatters).
+    body (same op order, same scatters).  Instrumented plans are ineligible:
+    ``_batched_consume`` does not thread the per-query event vector, and a
+    fused lane that silently stopped counting would corrupt the registry.
     """
+    if _instrument(plan):
+        return None
     ex = plan.execution
     saturation = plan.saturation or (
         SaturationPolicy.GROW if plan.max_groups is None else SaturationPolicy.RAISE
@@ -561,6 +667,8 @@ class _SortExecutor(_BufferedExecutor):
     the one remaining one-shot executor: chunks buffer and the pipeline
     runs at finalize."""
 
+    strategy_label = "sort"
+
     def finalize(self) -> Table:
         p, ex = self._plan, self._plan.execution
         keys, vals = self._gathered()
@@ -593,6 +701,8 @@ class _DirectExecutor(_ExecutorBase):
     far sparser than the row count means direct is the wrong ticketing),
     pads the accumulators (tickets unaffected), and re-tickets only the
     current chunk."""
+
+    strategy_label = "direct"
 
     def __init__(self, plan: GroupByPlan):
         if not plan.raw_keys:
@@ -685,6 +795,11 @@ class _DirectExecutor(_ExecutorBase):
             count = jnp.minimum(count, max_groups)
         return build_result_table(p.aggs, self._state.get, kbt, count, max_groups)
 
+    def device_table_bytes(self) -> int:
+        if self._state is None:
+            return 0
+        return sum(int(a.nbytes) for a in self._state.accs)
+
 
 # ---------------------------------------------------------------------------
 # hybrid: heavy-hitter registers + concurrent tail (streams natively)
@@ -730,6 +845,8 @@ class _HybridExecutor(_ExecutorBase):
     natively: ``grow`` rides the tail operator's in-stream bound growth and
     no chunks are retained."""
 
+    strategy_label = "hybrid"
+
     def __init__(self, plan: GroupByPlan):
         self._plan = plan
         self._specs = expand_agg_specs(plan.aggs)
@@ -758,6 +875,11 @@ class _HybridExecutor(_ExecutorBase):
         # raw ``__key__`` calling convention — the key SPACE is unchanged.
         op.key_columns = ["__key__"]
         op.raw_keys = True
+        if _instrument(plan) and not op.collect_events:
+            # adopted mid-stream: pre-switch counts are lost (the adopted
+            # operator ran uninstrumented), post-switch counts are exact
+            op.collect_events = True
+            op._events = obs_metrics.zero_event_vector()
         if op.grow_bound:
             op._grow(int(self._heavy.shape[0]))  # headroom for the inserts
         _, op._table = tk.get_or_insert(op._table, self._heavy)
@@ -776,6 +898,7 @@ class _HybridExecutor(_ExecutorBase):
             pipeline=ex.pipeline, capacity=ex.capacity, raw_keys=True,
             check_overflow=p.saturation != SaturationPolicy.UNCHECKED,
             grow_bound=p.saturation == SaturationPolicy.GROW,
+            collect_events=_instrument(p),
         )
         # Heavy keys own the FIRST tickets: a key whose every occurrence is
         # absorbed by the register path still gets counted, and the register
@@ -846,6 +969,22 @@ class _HybridExecutor(_ExecutorBase):
         finally:
             # registers stay separate: consume may continue after a read
             op._state = tail_state
+
+    def device_table_bytes(self) -> int:
+        if self._op is None:
+            return 0
+        return (
+            resize.table_nbytes(self._op._table)
+            + sum(int(a.nbytes) for a in self._op._state.accs)
+            + sum(int(r.nbytes) for r in (self._regs or ()))
+        )
+
+    def event_counts(self):
+        if self._op is None or not self._op.collect_events:
+            return None
+        # tail-pipeline counts only: register-absorbed heavy rows never
+        # enter the scan, so ``rows`` here reads as "tail rows"
+        return self._op.event_counts()
 
 
 # ---------------------------------------------------------------------------
@@ -936,6 +1075,14 @@ class _IncrementalMergeExecutor(_ExecutorBase):
         partial = self._chunk_partial(keys, vals)
         if not self._merged_any and self._pending is None:
             self._pending = partial  # single-chunk fast path: native layout
+            # the held raw partial IS retained state beyond the in-flight
+            # window (O(max_groups), not the chunk) — report it, don't
+            # under-count relative to the buffering executors
+            kbt, partials, _, _ = partial
+            self.peak_retained_bytes = max(
+                self.peak_retained_bytes,
+                int(kbt.nbytes) + sum(int(a.nbytes) for a in partials.values()),
+            )
             return
         if self._pending is not None:
             pending, self._pending = self._pending, None
@@ -967,6 +1114,15 @@ class _IncrementalMergeExecutor(_ExecutorBase):
             self._table.key_by_ticket, self._table.count, self._max_groups,
         )
 
+    def device_table_bytes(self) -> int:
+        n = resize.table_nbytes(self._table) + sum(
+            int(a.nbytes) for a in self._accs.values()
+        )
+        if self._pending is not None:
+            kbt, partials, _, _ = self._pending
+            n += int(kbt.nbytes) + sum(int(a.nbytes) for a in partials.values())
+        return n
+
 
 class _PallasExecutor(_IncrementalMergeExecutor):
     """Strategy ``pallas``: the VMEM-resident ticket kernel + segment-update
@@ -974,6 +1130,8 @@ class _PallasExecutor(_IncrementalMergeExecutor):
     lives only for one launch, so each chunk's bounded result merges into
     the carried table.  GROW re-launches the CHUNK with a grown
     bound/capacity (migrate == rebuild here) — never the stream."""
+
+    strategy_label = "pallas"
 
     def __init__(self, plan: GroupByPlan):
         super().__init__(plan)
@@ -1033,6 +1191,8 @@ class _PartitionedExecutor(_IncrementalMergeExecutor):
     batch through local pre-aggregation — and the chunk's partial groups
     merge into the carried table.  One aggregate per plan (the pre-agg
     table carries a single partial)."""
+
+    strategy_label = "partitioned"
 
     def __init__(self, plan: GroupByPlan):
         super().__init__(plan)
@@ -1100,6 +1260,8 @@ class _ShardedExecutor(_ExecutorBase):
     ``.raw`` for callers that need the per-device layout.
     """
 
+    strategy_label = "sharded"
+
     def __init__(self, plan: GroupByPlan):
         self._plan = plan
         self._specs = expand_agg_specs(plan.aggs)
@@ -1113,6 +1275,10 @@ class _ShardedExecutor(_ExecutorBase):
         self._max_local = ex.max_local_groups or plan.max_groups
         self._max_groups = plan.max_groups
         self._checked = plan.saturation == SaturationPolicy.GROW
+        self._collect = _instrument(plan)
+        self._events = None
+        self.migrations = 0
+        self.bound_grows = 0
         self._carry = None
         self._step = None
         self._rows = 0
@@ -1128,12 +1294,27 @@ class _ShardedExecutor(_ExecutorBase):
                 self._ndev, self._max_local, self._specs,
                 capacity=table_capacity(self._max_local, ex.load_factor),
             )
+        if self._collect and self._events is None:
+            self._events = jnp.zeros(
+                (self._ndev, obs_metrics.EVENT_VEC_LEN), jnp.int32
+            )
         if self._step is None:
             self._step = dist.make_sharded_consume_step(
                 ex.mesh, ex.axis,
                 update=ex.update or "scatter", load_factor=ex.load_factor,
-                checked=self._checked,
+                checked=self._checked, collect_events=self._collect,
             )
+
+    def _run_step(self, km, vm, start):
+        """One sharded consume step, threading the per-device event planes
+        when instrumented.  Returns the per-device halt flags."""
+        if self._collect:
+            self._carry, halts, self._events = self._step(
+                self._carry, km, vm, start, self._events
+            )
+        else:
+            self._carry, halts = self._step(self._carry, km, vm, start)
+        return halts
 
     def _morselize(self, keys, vals):
         """Split a chunk's rows contiguously over the mesh axis and each
@@ -1169,7 +1350,7 @@ class _ShardedExecutor(_ExecutorBase):
         self._ensure_state()
         km, vm = self._morselize(keys, vals)
         start = jnp.zeros((self._ndev,), jnp.int32)
-        self._carry, halts = self._step(self._carry, km, vm, start)
+        halts = self._run_step(km, vm, start)
         return (km, vm, halts) if self._checked else None
 
     def poll(self, token) -> None:
@@ -1204,13 +1385,21 @@ class _ShardedExecutor(_ExecutorBase):
                     new_cap = 2 * self._carry.capacity
                 # else: an earlier token's poll already grew — just replay
             if (new_maxl, new_cap) != (self._max_local, self._carry.capacity):
-                self._carry = dist.grow_sharded_carry(
-                    self._carry, new_maxl, new_cap
-                )
-                self._max_local = new_maxl
+                with obs_trace.span(
+                    "pause_migrate_resume", strategy="sharded",
+                    max_local=new_maxl, capacity=new_cap,
+                ):
+                    if new_cap != self._carry.capacity:
+                        self.migrations += 1  # every device's table migrates
+                    if new_maxl != self._max_local:
+                        self.bound_grows += 1
+                    self._carry = dist.grow_sharded_carry(
+                        self._carry, new_maxl, new_cap
+                    )
+                    self._max_local = new_maxl
             replayed = firsts
             start = jnp.asarray(firsts, jnp.int32)
-            self._carry, halts = self._step(self._carry, km, vm, start)
+            halts = self._run_step(km, vm, start)
 
     def finalize_raw(self):
         """Run the cross-device merge under the saturation policy over the
@@ -1343,6 +1532,29 @@ class _ShardedExecutor(_ExecutorBase):
         return build_result_table(
             self._plan.aggs, get, kbt, count, max_groups,
         )
+
+    def device_table_bytes(self) -> int:
+        if self._carry is None:
+            return 0
+        return sum(
+            int(leaf.nbytes) for leaf in jax.tree_util.tree_leaves(self._carry)
+        )
+
+    def event_counts(self):
+        if not self._collect or self._events is None:
+            return None
+        # one host round-trip, at an existing sync surface (stats/finalize);
+        # per-device planes sum into one engine-wide vector
+        ev, counts = jax.device_get((self._events, self._carry.count))
+        out = obs_metrics.event_vector_to_dict(ev.sum(axis=0))
+        out["migrations"] = self.migrations
+        out["bound_grows"] = self.bound_grows
+        out["num_groups"] = int(counts.sum())  # pre-merge local groups
+        out["table_capacity"] = int(self._carry.capacity) * self._ndev
+        out["table_load_factor"] = float(counts.sum()) / (
+            self._carry.capacity * self._ndev
+        )
+        return out
 
 
 __all__ = [

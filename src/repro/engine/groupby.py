@@ -56,6 +56,8 @@ from repro.core import updates as up
 from repro.core.hashing import EMPTY_KEY, table_capacity
 from repro.engine.columns import Table, chunk_key_column
 from repro.engine.morsels import DEFAULT_MORSEL_ROWS, morselize_chunk
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 class GroupByOverflowError(RuntimeError):
@@ -105,7 +107,42 @@ def expand_agg_specs(aggs: Sequence[AggSpec]) -> tuple:
     return tuple(dict.fromkeys(specs))
 
 
-def make_pause_scan_body(start, threshold, bound_slack, apply_update):
+def accumulate_scan_events(events, mkeys, probe_len, commit, pause_sat, halt_now):
+    """Fold one morsel's device-side event counts into the int32 event vector
+    (layout: ``obs.metrics`` EVT_* slots + probe-length histogram buckets).
+
+    Committed-only semantics: row/probe counts accrue only when ``commit`` is
+    true, so a pausing morsel's counts are dropped exactly like its state
+    update and the post-migration replay counts it once.  ``pause_sat`` /
+    ``halt_now`` count the pause events themselves (these DO fire on the
+    non-committing morsel — that is the point)."""
+    c = commit.astype(jnp.int32)
+    valid = mkeys != jnp.uint32(EMPTY_KEY)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    n_rows = jnp.int32(mkeys.shape[0])
+    events = events.at[obs_metrics.EVT_MORSELS].add(c)
+    events = events.at[obs_metrics.EVT_ROWS].add(c * n_valid)
+    events = events.at[obs_metrics.EVT_ROWS_MASKED].add(c * (n_rows - n_valid))
+    events = events.at[obs_metrics.EVT_PROBE_STEPS].add(c * jnp.sum(probe_len))
+    events = events.at[obs_metrics.EVT_PROBE_SATURATIONS].add(
+        pause_sat.astype(jnp.int32)
+    )
+    events = events.at[obs_metrics.EVT_PAUSES].add(halt_now.astype(jnp.int32))
+    # Probe-length histogram: committed valid lanes only; everyone else parks
+    # on an out-of-bounds index (mode="drop" no-op, the scatter idiom used by
+    # ticketing itself).
+    edges = jnp.asarray(obs_metrics.PROBE_HIST_EDGES, jnp.int32)
+    bucket = jnp.searchsorted(edges, probe_len, side="right").astype(jnp.int32)
+    idx = jnp.where(
+        valid & commit,
+        jnp.int32(obs_metrics.NUM_EVENTS) + bucket,
+        jnp.int32(obs_metrics.EVENT_VEC_LEN),
+    )
+    return events.at[idx].add(1, mode="drop")
+
+
+def make_pause_scan_body(start, threshold, bound_slack, apply_update,
+                         count_events=False):
     """THE checked pause/commit morsel body, shared by the single-device
     consume scan below and the per-device mesh consume step
     (``core.distributed.make_sharded_consume_step``) so the §4.4 pause
@@ -119,10 +156,19 @@ def make_pause_scan_body(start, threshold, bound_slack, apply_update):
     are idempotent under replay).  ``apply_update(state, tickets, vals)``
     folds one ticketed morsel into the caller's accumulator pytree (a full
     ``AggState`` for the engine, a single dense vector per device on the
-    mesh)."""
+    mesh).
+
+    ``count_events=True`` widens the carry to ``(table, state, halted,
+    events)`` where ``events`` is the int32 vector of ``obs.metrics`` event
+    counters (+ probe-length histogram), accumulated in-scan with
+    committed-only semantics — see :func:`accumulate_scan_events`.  The
+    default ``False`` path traces exactly as before."""
 
     def body(carry, xs):
-        table, state, halted = carry
+        if count_events:
+            table, state, halted, events = carry
+        else:
+            table, state, halted = carry
         idx, keys, vals = xs
         wants = idx >= start
         needs_room = table.count > threshold
@@ -132,7 +178,12 @@ def make_pause_scan_body(start, threshold, bound_slack, apply_update):
         halted = halted | halt_grow
         live = wants & ~halted
         mkeys = jnp.where(live, keys, jnp.uint32(EMPTY_KEY))
-        tickets, table = tk.get_or_insert(table, mkeys)
+        if count_events:
+            tickets, table, probe_len = tk.get_or_insert(
+                table, mkeys, count_probes=True
+            )
+        else:
+            tickets, table = tk.get_or_insert(table, mkeys)
         # Saturation: a valid row came back unticketed (no reachable empty
         # slot).  The morsel does not commit — its published inserts are
         # idempotent under replay, and its updates are dropped below.
@@ -144,16 +195,24 @@ def make_pause_scan_body(start, threshold, bound_slack, apply_update):
         )
         halt_now = halt_grow | (live & sat)
         halted = halted | halt_now
+        if count_events:
+            events = accumulate_scan_events(
+                events, mkeys, probe_len, commit, live & sat, halt_now
+            )
+            return (table, state, halted, events), halt_now
         return (table, state, halted), halt_now
 
     return body
 
 
 @functools.partial(
-    jax.jit, static_argnames=("update_fn", "load_factor", "checked", "grow_bound")
+    jax.jit,
+    static_argnames=("update_fn", "load_factor", "checked", "grow_bound",
+                     "collect_events"),
 )
-def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor,
-                  checked=True, grow_bound=False):
+def _consume_scan(table, state, km, vm, start, events=None, *, update_fn,
+                  load_factor, checked=True, grow_bound=False,
+                  collect_events=False):
     """One fused pass over a chunk's morsels: scan (probe→ticket→update).
 
     Morsels with index < ``start`` are skipped (resume support).  Before each
@@ -173,6 +232,14 @@ def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor,
     commits, rows that fail to ticket (ticket -1) are parked by the update
     masks, and the returned ``halts`` are constant-false so the host never
     needs to read them (zero blocking syncs).
+
+    ``collect_events=True`` threads the caller's ``events`` vector (see
+    ``obs.metrics``) through the scan carry and returns it as a fourth
+    output, accumulated entirely on device — the host reads it back only at
+    sync points it already owns (finalize / explicit ``event_counts()``), so
+    instrumentation adds zero extra device syncs.  With the default
+    ``collect_events=False`` and ``events=None`` the traced program is
+    byte-identical to the uninstrumented one.
     """
     capacity = table.capacity
     threshold = int(load_factor * capacity)
@@ -183,21 +250,46 @@ def _consume_scan(table, state, km, vm, start, *, update_fn, load_factor,
         body = make_pause_scan_body(
             start, threshold, bound_slack if grow_bound else None,
             lambda s, t, v: up.update_agg_state(s, t, v, update_fn),
+            count_events=collect_events,
         )
     else:
         def body(carry, xs):
-            table, state, halted = carry
+            if collect_events:
+                table, state, halted, events = carry
+            else:
+                table, state, halted = carry
             idx, keys, vals = xs
             wants = idx >= start
             mkeys = jnp.where(wants, keys, jnp.uint32(EMPTY_KEY))
-            tickets, table = tk.get_or_insert(table, mkeys)
+            if collect_events:
+                tickets, table, probe_len = tk.get_or_insert(
+                    table, mkeys, count_probes=True
+                )
+            else:
+                tickets, table = tk.get_or_insert(table, mkeys)
             new_state = up.update_agg_state(state, tickets, vals, update_fn)
             state = jax.tree_util.tree_map(
                 lambda new, old: jnp.where(wants, new, old), new_state, state
             )
+            if collect_events:
+                # Unchecked: every wanted morsel commits; a saturated probe
+                # table silently parks rows, so count it as a saturation
+                # event (there is no pause to count).
+                sat = wants & jnp.any(
+                    (tickets < 0) & (mkeys != jnp.uint32(EMPTY_KEY))
+                )
+                events = accumulate_scan_events(
+                    events, mkeys, probe_len, wants, sat, jnp.zeros((), jnp.bool_)
+                )
+                return (table, state, halted, events), jnp.zeros((), jnp.bool_)
             return (table, state, halted), jnp.zeros((), jnp.bool_)
 
     idxs = jnp.arange(km.shape[0], dtype=jnp.int32)
+    if collect_events:
+        (table, state, _, events), halts = jax.lax.scan(
+            body, (table, state, jnp.zeros((), jnp.bool_), events), (idxs, km, vm)
+        )
+        return table, state, halts, events
     (table, state, _), halts = jax.lax.scan(
         body, (table, state, jnp.zeros((), jnp.bool_)), (idxs, km, vm)
     )
@@ -218,6 +310,7 @@ class GroupByOperator:
     raw_keys: bool = False            # single pre-hashed uint32 key column
     check_overflow: bool = True       # False = paper's perfect-estimate regime
     grow_bound: bool = False          # widen max_groups in-stream (no replay)
+    collect_events: bool = False      # thread the obs event vector in-scan
 
     def __post_init__(self):
         cap = self.capacity or table_capacity(self.max_groups, self.load_factor)
@@ -233,6 +326,13 @@ class GroupByOperator:
         else:
             self._update_fn = up.get_update_fn(self.update)
         self._overflowed = False  # host mirror of table.overflowed
+        # Device event vector (None = uninstrumented trace, byte-identical to
+        # pre-obs) + host-side growth counters (plain ints, always cheap).
+        self._events = (
+            obs_metrics.zero_event_vector() if self.collect_events else None
+        )
+        self.migrations = 0
+        self.bound_grows = 0
         assert self.pipeline in ("scan", "host"), self.pipeline
 
     # -- morsel-driven contract ---------------------------------------------
@@ -273,19 +373,29 @@ class GroupByOperator:
             # Perfect-estimate regime (unchecked): one pass, fixed capacity,
             # no migrations and NO blocking sync — rows past the bound (or a
             # saturated probe table) drop, exactly the legacy jitted paths.
-            self._table, self._state, _ = _consume_scan(
-                self._table, self._state, km, vm, jnp.int32(0),
-                update_fn=self._update_fn, load_factor=self.load_factor,
-                checked=False,
-            )
+            self._run_scan(km, vm, 0, checked=False)
             return None
-        table, state, halts = _consume_scan(
-            self._table, self._state, km, vm, jnp.int32(0),
-            update_fn=self._update_fn, load_factor=self.load_factor,
-            grow_bound=self.grow_bound,
-        )
-        self._table, self._state = table, state
-        return (km, vm, halts, table.overflowed)
+        halts = self._run_scan(km, vm, 0)
+        return (km, vm, halts, self._table.overflowed)
+
+    def _run_scan(self, km, vm, start, *, checked=True):
+        """Dispatch one ``_consume_scan`` pass, threading the device event
+        vector through the carry when instrumented.  Returns the per-morsel
+        halt flags (constant-false unchecked)."""
+        if self.collect_events:
+            self._table, self._state, halts, self._events = _consume_scan(
+                self._table, self._state, km, vm, jnp.int32(start),
+                self._events, update_fn=self._update_fn,
+                load_factor=self.load_factor, checked=checked,
+                grow_bound=checked and self.grow_bound, collect_events=True,
+            )
+        else:
+            self._table, self._state, halts = _consume_scan(
+                self._table, self._state, km, vm, jnp.int32(start),
+                update_fn=self._update_fn, load_factor=self.load_factor,
+                checked=checked, grow_bound=checked and self.grow_bound,
+            )
+        return halts
 
     def poll(self, token) -> None:
         """Resolve one in-flight chunk: read its control signals (ONE
@@ -307,20 +417,19 @@ class GroupByOperator:
             # per growth event instead of one per morsel; accumulators are
             # ticket-indexed so capacity migration never touches them.
             start = int(flagged[0])
-            if not self._grow(km.shape[1]) and start == replayed:
-                # The pause survived a replay with no growth condition met
-                # (an earlier in-flight chunk's poll already grew, or a
-                # boundary-saturated probe cluster): force a doubling so
-                # the replay loop always makes progress.
-                self._table = resize.migrate(self._table, 2 * self._table.capacity)
-            replayed = start
-            table, state, halts = _consume_scan(
-                self._table, self._state, km, vm, jnp.int32(start),
-                update_fn=self._update_fn, load_factor=self.load_factor,
-                grow_bound=self.grow_bound,
-            )
-            self._table, self._state = table, state
-            overflowed = table.overflowed
+            with obs_trace.span("pause_migrate_resume", morsel=start):
+                if not self._grow(km.shape[1]) and start == replayed:
+                    # The pause survived a replay with no growth condition
+                    # met (an earlier in-flight chunk's poll already grew,
+                    # or a boundary-saturated probe cluster): force a
+                    # doubling so the replay loop always makes progress.
+                    self._table = resize.migrate(
+                        self._table, 2 * self._table.capacity
+                    )
+                    self.migrations += 1
+                replayed = start
+                halts = self._run_scan(km, vm, start)
+                overflowed = self._table.overflowed
 
     def _grow(self, morsel_rows: int) -> bool:
         """Host side of a pause: widen whatever the pause was about — the
@@ -331,15 +440,19 @@ class GroupByOperator:
         ingest re-checks instead of blindly growing)."""
         count = int(jax.device_get(self._table.count))
         grew = False
+        cap_before = self._table.capacity
         if self.grow_bound and count > self.max_groups - morsel_rows:
             new_max = max(4 * self.max_groups, count + morsel_rows, 64)
             self._table = resize.grow_bound(self._table, new_max, self.load_factor)
             self._state = up.grow_agg_state(self._state, new_max)
             self.max_groups = new_max
+            self.bound_grows += 1
             grew = True
         if count > self.load_factor * self._table.capacity:
             self._table = resize.migrate(self._table, 2 * self._table.capacity)
             grew = True
+        if self._table.capacity != cap_before:
+            self.migrations += 1  # bound grow may migrate internally, too
         return grew
 
     def _consume_host_loop(self, km, vm, num) -> None:
@@ -353,7 +466,10 @@ class GroupByOperator:
                 if self.grow_bound:
                     self._grow(km.shape[1])  # bound headroom + load factor
                 else:
+                    cap_before = self._table.capacity
                     self._table = resize.maybe_resize(self._table, self.load_factor)
+                    if self._table.capacity != cap_before:
+                        self.migrations += 1
             tickets, self._table = tk.get_or_insert(self._table, km[i])
             # Saturation recovery (bounded probe loop's ticket==-1 contract):
             # migrate and replay the morsel, same as the scan path's pause.
@@ -361,6 +477,7 @@ class GroupByOperator:
                 jax.device_get(jnp.any((tickets < 0) & (km[i] != jnp.uint32(EMPTY_KEY))))
             ):
                 self._table = resize.migrate(self._table, 2 * self._table.capacity)
+                self.migrations += 1
                 tickets, self._table = tk.get_or_insert(self._table, km[i])
             self._state = up.update_agg_state(
                 self._state, tickets, {c: v[i] for c, v in vm.items()},
@@ -391,6 +508,25 @@ class GroupByOperator:
     @property
     def num_groups(self):
         return self._table.count
+
+    def event_counts(self) -> dict:
+        """Merged operator counters: the device event vector (ONE device
+        round-trip — call only at finalize-grade sync points) + host-tracked
+        growth events + table occupancy.  Zeros for the device half when the
+        operator was built uninstrumented (``collect_events=False``)."""
+        if self._events is not None:
+            vec, count = jax.device_get((self._events, self._table.count))
+            out = obs_metrics.event_vector_to_dict(vec)
+        else:
+            count = jax.device_get(self._table.count)
+            out = {name: 0 for name in obs_metrics.EVENT_NAMES}
+            out["probe_hist"] = [0] * obs_metrics.PROBE_HIST_BUCKETS
+        out["migrations"] = self.migrations
+        out["bound_grows"] = self.bound_grows
+        out["num_groups"] = int(count)
+        out["table_capacity"] = self._table.capacity
+        out["table_load_factor"] = int(count) / self._table.capacity
+        return out
 
 
 def groupby(

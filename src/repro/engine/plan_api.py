@@ -70,6 +70,7 @@ import jax.numpy as jnp
 from repro.engine.columns import Table
 from repro.engine.groupby import AggSpec, GroupByOverflowError, expand_agg_specs
 from repro.engine.morsels import DEFAULT_MORSEL_ROWS
+from repro.obs import trace
 
 STRATEGIES = ("auto", "concurrent", "partitioned", "hybrid", "pallas", "sharded")
 
@@ -95,6 +96,9 @@ class ExecutionPolicy:
 
     pipeline: str = "scan"            # scan (compiled) | host (reference loop)
     morsel_rows: int = DEFAULT_MORSEL_ROWS
+    # observability: None → follow the global obs.metrics enable flag;
+    # True/False force per-plan device-side event collection on/off
+    instrument: bool | None = None
     update: str | None = None         # scatter|onehot|sort_segment|serialized; None → planner
     load_factor: float = 0.5
     capacity: int | None = None       # probe-table slots; None → hashing.table_capacity
@@ -261,34 +265,45 @@ class StreamHandle:
         return getattr(self._ex, "peak_buffered_chunks", 0)
 
     def stats(self) -> dict:
-        """Ingest counters + the executor's memory telemetry as one flat
-        dict: ``chunks_consumed``/``rows_consumed``, the
-        ``peak_buffered_chunks`` high-water mark, ``peak_retained_bytes``
-        (host bytes an executor holds beyond the in-flight window), and —
-        on a spilling executor — spilled bytes/rows, per-partition
-        breakdowns and device-table footprints.  Readable at any point:
-        mid-stream (pairs with ``snapshot()``), after ``result()``, or on a
-        cancelled handle (ingest counters only)."""
-        out = {
+        """THE unified telemetry schema: the legacy flat keys
+        (``chunks_consumed``/``rows_consumed``, the ``peak_buffered_chunks``
+        high-water mark, ``peak_retained_bytes``, and — on a spilling
+        executor — spilled bytes/rows and per-partition breakdowns) kept at
+        the top level as the compat view, PLUS nested sections shared by
+        every executor and ``QueryHandle``: ``ingest`` (chunk/row counters),
+        ``memory`` (retention high-water marks), ``device`` (table bytes +
+        the in-scan event counters when instrumented), and ``spill``.
+        Readable at any point: mid-stream (pairs with ``snapshot()``), after
+        ``result()``, or on a cancelled handle (ingest counters only)."""
+        ingest = {
             "chunks_consumed": self.chunks_consumed,
             "rows_consumed": self.rows_consumed,
         }
+        out = dict(ingest)
         if self._ex is not None:
-            out.update(self._ex.memory_stats())
+            out.update(
+                self._ex.stats() if hasattr(self._ex, "stats")
+                else self._ex.memory_stats()
+            )
+        out["ingest"] = ingest
+        out.setdefault("schema", "repro.obs/v1")
         return out
 
     def _dispatch(self, chunk: Table) -> None:
-        token = self._ex.consume_async(chunk)
+        with trace.span("consume_async", chunk=self.chunks_consumed):
+            token = self._ex.consume_async(chunk)
         self.chunks_consumed += 1
         self.rows_consumed += chunk.num_rows
         if token is not None:
             self._inflight.append(token)
         while len(self._inflight) > self._prefetch:
-            self._ex.poll(self._inflight.popleft())
+            with trace.span("poll"):
+                self._ex.poll(self._inflight.popleft())
 
     def _drain_inflight(self) -> None:
         while self._inflight:
-            self._ex.poll(self._inflight.popleft())
+            with trace.span("poll"):
+                self._ex.poll(self._inflight.popleft())
 
     def pump(self, max_chunks: int | None = None) -> int:
         """Pull and consume up to ``max_chunks`` chunks (all remaining when
@@ -299,13 +314,14 @@ class StreamHandle:
         if self.closed:
             raise ValueError("stream already finalized via result()")
         n = 0
-        while max_chunks is None or n < max_chunks:
-            chunk = next(self._chunks, None)
-            if chunk is None:
-                self._exhausted = True
-                break
-            self._dispatch(chunk)
-            n += 1
+        with trace.span("pump", max_chunks=max_chunks):
+            while max_chunks is None or n < max_chunks:
+                chunk = next(self._chunks, None)
+                if chunk is None:
+                    self._exhausted = True
+                    break
+                self._dispatch(chunk)
+                n += 1
         return n
 
     def snapshot(self) -> Table:
@@ -317,8 +333,9 @@ class StreamHandle:
             raise ValueError("stream cancelled")
         if self.closed:
             return self._result
-        self._drain_inflight()
-        return self._ex.finalize()
+        with trace.span("snapshot"):
+            self._drain_inflight()
+            return self._ex.finalize()
 
     def result(self) -> Table:
         """Drain the source, settle in-flight chunks, finalize, and close
@@ -327,8 +344,12 @@ class StreamHandle:
             raise ValueError("stream cancelled")
         if not self.closed:
             self.pump()
-            self._drain_inflight()
-            self._result = self._ex.finalize()
+            # the drain belongs to finalize in the trace: settling in-flight
+            # tokens (incl. any pause-migrate-resume replay) is part of
+            # closing the stream, not of any pump
+            with trace.span("finalize"):
+                self._drain_inflight()
+                self._result = self._ex.finalize()
         return self._result
 
     # -- SlotTask face (serve/scheduler.py) ---------------------------------

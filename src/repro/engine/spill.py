@@ -48,9 +48,16 @@ from repro.core import ticketing as tk
 from repro.core import updates as up
 from repro.core.hashing import EMPTY_KEY
 from repro.engine.columns import Table
-from repro.engine.executors import _MERGE_KIND, _chunk_keys_values, _ExecutorBase
+from repro.engine.executors import (
+    _MERGE_KIND,
+    _chunk_keys_values,
+    _ExecutorBase,
+    _instrument,
+)
 from repro.engine.groupby import GroupByOperator, build_result_table, expand_agg_specs
 from repro.engine.plan_api import GroupByPlan, value_columns
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 _EMPTY32 = np.uint32(0xFFFFFFFF)
 
@@ -162,6 +169,8 @@ class SpillExecutor(_ExecutorBase):
     own tokens, so the double-buffered ingest window works unchanged.
     """
 
+    strategy_label = "spill"
+
     def __init__(self, plan: GroupByPlan):
         if plan.execution.ticketing != "hash":
             raise ValueError(
@@ -182,11 +191,13 @@ class SpillExecutor(_ExecutorBase):
             use_kernel=ex.use_kernel, load_factor=ex.load_factor,
             pipeline=ex.pipeline, capacity=ex.capacity, raw_keys=True,
             check_overflow=True, grow_bound=False,
+            collect_events=_instrument(plan),
         )
         self._manager = SpillManager(ex.spill_partitions, self._vcols)
         self._sketch = adaptive.RunningStats(domain=ex.key_domain)
         self._resident = np.ones(ex.spill_partitions, bool)
         self._host_count = 0        # exact mirror of the hot table's count
+        self._readmission_passes = 0  # partition replays across finalizes
         self._rows = 0
         self._residency_bytes = self._device_bytes(self._op)
         self._peak_device_bytes = self._residency_bytes
@@ -291,9 +302,14 @@ class SpillExecutor(_ExecutorBase):
         fresh_accs: dict = {spec: [] for spec in self._specs}
         peak = self._residency_bytes
         for pid in parts:
-            pop = self._partition_op(pid)
-            for chunk in self._manager.readmit(pid).chunks():
-                pop.consume(chunk)
+            with obs_trace.span(
+                "spill_partition_replay", partition=pid,
+                rows=self._manager.partition_rows[pid],
+            ):
+                pop = self._partition_op(pid)
+                for chunk in self._manager.readmit(pid).chunks():
+                    pop.consume(chunk)
+                self._readmission_passes += 1
             peak = max(peak, self._residency_bytes + self._device_bytes(pop))
             t_hot = tk.lookup(op._table, pop._table.key_by_ticket)
             kbt_p = np.asarray(jax.device_get(pop._table.key_by_ticket))
@@ -342,6 +358,42 @@ class SpillExecutor(_ExecutorBase):
         s["device_groups"] = self._host_count
         s["resident_partitions"] = int(self._resident.sum())
         return s
+
+    def device_table_bytes(self) -> int:
+        return self._device_bytes(self._op)
+
+    def event_counts(self):
+        # hot-table scan counters only (partition replay ops are transient);
+        # the residency invariant shows up here: migrations stays 0
+        if not self._op.collect_events:
+            return None
+        return self._op.event_counts()
+
+    def stats(self) -> dict:
+        out = super().stats()
+        spill = dict(self._manager.stats())
+        spill["readmission_passes"] = self._readmission_passes
+        spill["residency_budget"] = self._budget
+        spill["residency_bytes"] = self._residency_bytes
+        spill["peak_device_table_bytes"] = self._peak_device_bytes
+        spill["resident_partitions"] = int(self._resident.sum())
+        out["spill"] = spill
+        if obs_metrics.enabled():
+            pub = getattr(self, "_spill_publisher", None)
+            if pub is None:
+                pub = obs_metrics.EventPublisher(strategy=self.strategy_label)
+                self._spill_publisher = pub
+            pub.publish({
+                "spill.spilled_rows": self._manager.spilled_rows,
+                "spill.spilled_bytes": self._manager.spilled_bytes,
+                "spill.spill_events": self._manager.spill_events,
+                "spill.readmitted_rows": self._manager.readmitted_rows,
+                "spill.readmission_passes": self._readmission_passes,
+            })
+            obs_metrics.gauge(
+                "spill.resident_partitions", strategy=self.strategy_label
+            ).set(int(self._resident.sum()))
+        return out
 
 
 __all__ = ["SpillExecutor", "SpillManager", "partition_of"]

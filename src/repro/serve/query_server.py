@@ -134,6 +134,28 @@ class QueryHandle:
         plan runs out-of-core."""
         return self._stream.stats()
 
+    def profile(self) -> dict:
+        """Per-query execution profile, readable at any point in the
+        query's lifecycle (queued, running, terminal): wall/queue wall-clock
+        seconds from the slot handle, scheduling quanta received, ingest
+        progress, the executor's current device-table footprint, and the
+        full unified ``stats()`` payload nested under ``"stats"``."""
+        slot, stream = self._slot, self._stream
+        stats = stream.stats()
+        return {
+            "tenant": slot.tenant,
+            "status": slot.status,
+            "wall_time_s": slot.wall_time_s,
+            "queue_wait_s": slot.queue_wait_s,
+            "quanta": slot.steps,
+            "chunks": stream.chunks_consumed,
+            "rows": stream.rows_consumed,
+            "device_table_bytes": stats.get("device", {}).get(
+                "device_table_bytes", 0
+            ),
+            "stats": stats,
+        }
+
     def snapshot(self):
         """Incremental per-query read: the groups this query has aggregated
         so far, without disturbing its stream (idempotent executor

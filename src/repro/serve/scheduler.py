@@ -38,9 +38,13 @@ at admission by the query server (enforced through the plan's
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Hashable, Protocol, runtime_checkable
+
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @runtime_checkable
@@ -111,12 +115,38 @@ class SlotHandle:
     last_step: int = -1        # scheduler clock of the latest quantum
     admitted_at: int = -1      # clock at slot admission
     finished_at: int = -1      # clock at terminal transition
+    # wall-clock lifecycle (perf_counter seconds) backing QueryHandle.profile()
+    submitted_ts: float = field(default_factory=time.perf_counter)
+    admitted_ts: float | None = None
+    finished_ts: float | None = None
     error: BaseException | None = None
     value: Any = None
 
     @property
     def terminal(self) -> bool:
         return self.status in (DONE, FAILED, CANCELLED)
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Wall seconds spent queued before slot admission (live for a
+        still-queued handle)."""
+        end = self.admitted_ts
+        if end is None:
+            end = (
+                self.finished_ts if self.finished_ts is not None
+                else time.perf_counter()
+            )
+        return max(end - self.submitted_ts, 0.0)
+
+    @property
+    def wall_time_s(self) -> float:
+        """Wall seconds from submission to the terminal transition (live
+        for a handle still in flight)."""
+        end = (
+            self.finished_ts if self.finished_ts is not None
+            else time.perf_counter()
+        )
+        return max(end - self.submitted_ts, 0.0)
 
     def result(self) -> Any:
         """Terminal result; raises the stored error for failed handles.
@@ -146,6 +176,7 @@ class Scheduler:
         self._turn = 0                       # rotation cursor into _tenant_order
         self._turn_served = 0                # quanta served in the current turn
         self._tenant_steps: dict[str, int] = {}
+        self._tenant_queue_wait: dict[str, float] = {}  # admitted handles only
 
     # -- budgets / stats ----------------------------------------------------
 
@@ -162,6 +193,13 @@ class Scheduler:
             "steps": self._tenant_steps.get(tenant, 0),
             "running": len(live),
             "queued": len(queued),
+            # obs schema aliases + accumulated time-in-queue: ``queue_wait_s``
+            # covers every ADMITTED handle plus the live wait of still-queued
+            # ones, so it is monotone across a run
+            "quanta": self._tenant_steps.get(tenant, 0),
+            "queue_depth": len(queued),
+            "queue_wait_s": self._tenant_queue_wait.get(tenant, 0.0)
+            + sum(h.queue_wait_s for h in queued),
         }
 
     # -- admission ----------------------------------------------------------
@@ -185,12 +223,18 @@ class Scheduler:
                 handle.slot = i
                 handle.status = RUNNING
                 handle.admitted_at = self.clock
+                handle.admitted_ts = time.perf_counter()
+                self._tenant_queue_wait[handle.tenant] = (
+                    self._tenant_queue_wait.get(handle.tenant, 0.0)
+                    + handle.queue_wait_s
+                )
                 self._slots[i] = handle
 
     def _release(self, handle: SlotHandle) -> None:
         if handle.slot is not None and self._slots[handle.slot] is handle:
             self._slots[handle.slot] = None
         handle.finished_at = self.clock
+        handle.finished_ts = time.perf_counter()
         self._admit()
 
     # -- cancellation -------------------------------------------------------
@@ -278,15 +322,25 @@ class Scheduler:
                 if h is not primary and getattr(h.task, "batch_key", None) == key
             ]
         try:
-            if len(group) > 1:
-                type(primary.task).step_batch([h.task for h in group])
-            else:
-                primary.task.step()
+            with obs_trace.span(
+                "quantum", tenant=tenant, clock=self.clock, batch=len(group)
+            ):
+                if len(group) > 1:
+                    type(primary.task).step_batch([h.task for h in group])
+                else:
+                    primary.task.step()
         except BaseException as err:
             for h in group:
                 self._fail(h, err)
             return len(group)
         stepped = len(group)
+        if obs_metrics.enabled():
+            obs_metrics.counter("scheduler.quanta", tenant=tenant).add(stepped)
+            depth: dict[str, int] = {t: 0 for t in self._tenant_order}
+            for h in self._queue:
+                depth[h.tenant] = depth.get(h.tenant, 0) + 1
+            for t, d in depth.items():
+                obs_metrics.gauge("scheduler.queue_depth", tenant=t).set(d)
         for h in group:
             h.steps += 1
             h.last_step = self.clock
