@@ -9,8 +9,10 @@ ingest-overlap and streaming-sharded numbers, incl. peak RSS),
 §Serving (bench_serve's BENCH_serve.json artifact: batched-vs-sequential
 multi-query dispatch, fairness clocks, cancellation latency), §Spill
 (bench_spill's BENCH_spill.json artifact: out-of-core cardinality sweep,
-exactness, device-bytes gate, overhead vs the enough-memory baseline) and
-§Operational (bench_stream's device-side scan counters: probe-length
+exactness, device-bytes gate, overhead vs the enough-memory baseline),
+§Elasticity (bench_elastic's BENCH_elastic.json artifact: checkpoint
+save/restore cost, mid-stream re-mesh recovery vs full replay, exactness
+gates) and §Operational (bench_stream's device-side scan counters: probe-length
 histogram and load factor, uniform vs zipfian keys, plus the
 instrumentation-overhead gate).
 """
@@ -140,6 +142,38 @@ def spill_table(path):
               f"(baseline {r['inmemory_us']/1e3:.1f} ms) | | | |")
 
 
+def elasticity_table(path):
+    with open(path) as f:
+        r = json.load(f)
+    print(f"Rows: {r.get('n_rows', '—')}, {r.get('chunks', '—')} chunks, "
+          f"{r.get('cardinality', '—')} groups\n")
+    print("| recovery path | cost | vs alternative | exact |")
+    print("|---|---|---|---|")
+    ck = r.get("checkpoint", {})
+    for label in ("early", "late"):
+        cell = ck.get(label)
+        if not cell:
+            continue
+        print(f"| save (chunk {cell['snap_at']}) | {cell['save_us']/1e3:.1f} ms "
+              f"| commit {cell['ckpt_bytes']/1024:.0f} KiB | |")
+        print(f"| restore (chunk {cell['snap_at']}) "
+              f"| {cell['restore_us']/1e3:.1f} ms | deserialize+fast-forward "
+              f"| {'yes' if cell['exact'] else 'NO'} |")
+    rm = r.get("remesh")
+    if rm:
+        print(f"| re-mesh 4→3 devices | {rm['remesh_us']/1e3:.1f} ms "
+              f"| carry re-bucket at mid-stream | "
+              f"{'yes' if rm['remesh_exact'] else 'NO'} |")
+        print(f"| re-mesh + finish | {rm['recovery_us']/1e3:.1f} ms "
+              f"| {rm['ratio']:.2f}× full replay "
+              f"({rm['replay_us']/1e3:.1f} ms) | |")
+    gates = r.get("gates", {})
+    if gates:
+        ok = all(g.get("pass") for g in gates.values())
+        print(f"| gates | {'PASS' if ok else 'FAIL'} "
+              f"(recovery ≤1.5× replay, both paths exact) | | |")
+
+
 _PROBE_LABELS = ("1", "2", "3", "4", "5-8", "9-16", "17-32", "33+")
 
 
@@ -174,13 +208,15 @@ def main():
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--section", default="both",
                     choices=["dryrun", "roofline", "streaming", "serving",
-                             "spill", "operational", "both"])
+                             "spill", "elasticity", "operational", "both"])
     ap.add_argument("--stream-json", default="BENCH_stream.json",
                     help="bench_stream artifact for §Streaming")
     ap.add_argument("--serve-json", default="BENCH_serve.json",
                     help="bench_serve artifact for §Serving")
     ap.add_argument("--spill-json", default="BENCH_spill.json",
                     help="bench_spill artifact for §Spill")
+    ap.add_argument("--elastic-json", default="BENCH_elastic.json",
+                    help="bench_elastic artifact for §Elasticity")
     args = ap.parse_args()
     cells = load(args.dir)
     if args.section in ("dryrun", "both"):
@@ -202,6 +238,10 @@ def main():
     if args.section in ("spill", "both") and os.path.exists(args.spill_json):
         print("### Out-of-core spill (bench_spill)\n")
         spill_table(args.spill_json)
+        print()
+    if args.section in ("elasticity", "both") and os.path.exists(args.elastic_json):
+        print("### Fault tolerance & elasticity (bench_elastic)\n")
+        elasticity_table(args.elastic_json)
         print()
     if args.section in ("operational", "both") and os.path.exists(args.stream_json):
         print("### Operational (device-side scan counters)\n")

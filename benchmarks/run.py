@@ -18,6 +18,7 @@ def main() -> None:
     from benchmarks import (
         bench_breakdown,
         bench_e2e,
+        bench_elastic,
         bench_hybrid,
         bench_memory,
         bench_plan,
@@ -49,6 +50,8 @@ def main() -> None:
             n=n, json_path=os.environ.get("BENCH_SERVE_JSON"))),
         ("spill", lambda: bench_spill.run(
             n=n, json_path=os.environ.get("BENCH_SPILL_JSON"))),
+        ("elastic", lambda: bench_elastic.run(
+            n=n, json_path=os.environ.get("BENCH_ELASTIC_JSON"))),
         ("roofline", bench_roofline.run),
     ]
     for name, fn in suites:

@@ -52,6 +52,64 @@ def _unflatten_into(tree_template, flat: dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+# -- the atomic-commit contract (shared) -------------------------------------
+#
+# Both the training CheckpointManager and the engine's elastic stream
+# checkpoints (engine/elastic.py) commit through these two functions, so the
+# crash-safety argument lives exactly once: a commit directory exists iff its
+# every file was fully written (write to a temp dir, then one atomic rename).
+# Stale ``.tmp_step_*`` leftovers from a crashed save are invisible to
+# ``latest_commit`` and overwritten by the next save of the same step.
+
+
+def commit_payload(directory: str, step: int,
+                   payload: dict[str, dict[str, np.ndarray]],
+                   meta: dict) -> str:
+    """Atomically commit ``{name: flat-array-dict}`` npz files plus a
+    ``meta.json`` as ``step_{step:08d}`` under ``directory``; returns the
+    committed path.  Re-committing an existing step replaces it atomically
+    (rename over a populated dir fails on some platforms, so the old commit
+    is removed first — the temp dir still guarantees no torn state)."""
+    os.makedirs(directory, exist_ok=True)
+    tmp = os.path.join(directory, f".tmp_step_{step}")
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    for name, flat in payload.items():
+        np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_commit_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    commits = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    return int(commits[-1].split("_")[1]) if commits else None
+
+
+def latest_commit(directory: str, names: tuple = ("state",)):
+    """Newest commit under ``directory`` as ``(step, {name: arrays}, meta)``,
+    or ``None`` when nothing has been committed (in-flight ``.tmp_step_*``
+    dirs never count)."""
+    step = latest_commit_step(directory)
+    if step is None:
+        return None
+    path = os.path.join(directory, f"step_{step:08d}")
+    payload = {
+        name: dict(np.load(os.path.join(path, f"{name}.npz")))
+        for name in names
+    }
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return step, payload, meta
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
         self.dir = directory
@@ -71,16 +129,7 @@ class CheckpointManager:
         meta = {"step": step, "time": time.time(), **(extra or {})}
 
         def _write():
-            tmp = os.path.join(self.dir, f".tmp_step_{step}")
-            final = os.path.join(self.dir, f"step_{step:08d}")
-            if os.path.exists(tmp):
-                shutil.rmtree(tmp)
-            os.makedirs(tmp)
-            for name, flat in payload.items():
-                np.savez(os.path.join(tmp, f"{name}.npz"), **flat)
-            with open(os.path.join(tmp, "meta.json"), "w") as f:
-                json.dump(meta, f)
-            os.rename(tmp, final)  # atomic commit
+            commit_payload(self.dir, step, payload, meta)
             self._gc()
 
         if self.async_save:

@@ -37,13 +37,15 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import resize
 from repro.core import ticketing as tk
 from repro.core import updates as up
 from repro.core.aggregation import GroupByResult
-from repro.core.hashing import EMPTY_KEY, slot_hash, table_capacity
+from repro.core.hashing import (EMPTY_KEY, partition_hash, slot_hash,
+                                table_capacity)
 from repro.core.partitioned import make_preagg, preagg_morsel
 from repro.parallel.sharding import shard_map
 
@@ -278,6 +280,118 @@ def grow_sharded_carry(carry: ShardedCarry, new_max_local: int,
     return ShardedCarry(keys, tickets, kbt, carry.count, carry.ovf, acc)
 
 
+def rebucket_sharded_carry(carry: ShardedCarry, new_ndev: int, *,
+                           load_factor: float = 0.5,
+                           max_local: int | None = None):
+    """Re-bucket a streamed :class:`ShardedCarry` onto a mesh with a
+    DIFFERENT device count — the elastic re-mesh primitive (device-loss
+    recovery and restore-on-a-new-mesh both lower to this).
+
+    Migration to a different mesh is the same table re-bucketing problem as
+    growing, just across devices instead of capacities: each carried
+    ``(key, partial)`` entry is reassigned by the SAME hash-partition rule
+    the ``all_to_all`` exchange merge uses (``partition_hash(key, ndev, seed=7)``),
+    entries of one key that were ticketed on several source devices fold
+    with their spec's merge kind (sum/min/max — exactly what the finalize
+    merge would have done), and each destination device union-replays its
+    assigned keys into a fresh ticket table (the §4.4 migration, across the
+    mesh).  Runs host-side over O(devices × max_local) carried state — rows
+    never move, the paper's indirection payoff again.
+
+    The per-device ``ovf`` loss flags are sticky GLOBAL semantics (keys
+    already dropped stay dropped), so every survivor inherits their OR.
+    Returns ``(carry, max_local)`` sized for ``new_ndev`` devices; pass
+    ``max_local`` to keep a caller-contracted local bound (it is raised
+    automatically if the folded entries need more room).
+    """
+    assert new_ndev >= 1, new_ndev
+    kbt, counts, ovf = jax.device_get((carry.kbt, carry.count, carry.ovf))
+    kbt = np.asarray(kbt)
+    counts = np.asarray(counts)
+    specs = carry.acc.specs
+    accs = [np.asarray(a) for a in jax.device_get(carry.acc.accs)]
+    # flatten every device's valid ticket prefix into one entry list
+    sel = [
+        (d, int(c)) for d, c in enumerate(counts.tolist()) if int(c) > 0
+    ]
+    if sel:
+        all_keys = np.concatenate([kbt[d, :c] for d, c in sel])
+        all_vals = [np.concatenate([a[d, :c] for d, c in sel]) for a in accs]
+    else:
+        all_keys = np.zeros((0,), np.uint32)
+        all_vals = [np.zeros((0,), a.dtype) for a in accs]
+    # destination device by the exchange merge's partition rule
+    pid = np.asarray(jax.device_get(
+        partition_hash(jnp.asarray(all_keys), new_ndev, seed=7)
+    )).astype(np.int64) if all_keys.size else np.zeros((0,), np.int64)
+
+    per_dev_keys, per_dev_vals = [], []
+    for d in range(new_ndev):
+        mine = pid == d
+        keys_d = all_keys[mine]
+        uniq, inv = np.unique(keys_d, return_inverse=True)
+        folded = []
+        for (_, kind), v in zip(specs, all_vals):
+            mk = _MERGE_KIND[kind]
+            if mk == "sum":
+                acc = np.zeros(uniq.shape, v.dtype)
+                np.add.at(acc, inv, v[mine])
+            elif mk == "min":
+                acc = np.full(uniq.shape, np.asarray(up.neutral("min")), v.dtype)
+                np.minimum.at(acc, inv, v[mine])
+            else:
+                acc = np.full(uniq.shape, np.asarray(up.neutral("max")), v.dtype)
+                np.maximum.at(acc, inv, v[mine])
+            folded.append(acc)
+        per_dev_keys.append(uniq)
+        per_dev_vals.append(folded)
+
+    need = max((k.shape[0] for k in per_dev_keys), default=0)
+    new_max_local = max(need, max_local or 0, 64)
+    cap = table_capacity(new_max_local, load_factor)
+    any_ovf = bool(np.asarray(ovf).any())
+
+    out_keys, out_tickets, out_kbt, out_count, out_acc = [], [], [], [], []
+    for d in range(new_ndev):
+        uniq = per_dev_keys[d]
+        padded = jnp.concatenate([
+            jnp.asarray(uniq, jnp.uint32),
+            jnp.full((new_max_local - uniq.shape[0],), EMPTY_KEY, jnp.uint32),
+        ])
+        tickets, table = tk.get_or_insert(
+            tk.make_table(cap, max_groups=new_max_local), padded
+        )
+        dev_accs = []
+        for (_, kind), v in zip(specs, per_dev_vals[d]):
+            acc = up.init_acc(new_max_local, kind)
+            vpad = jnp.concatenate([
+                jnp.asarray(v),
+                jnp.full((new_max_local - v.shape[0],), up.neutral(kind),
+                         acc.dtype),
+            ])
+            dev_accs.append(up.scatter_update(
+                acc, tickets, vpad, kind=_MERGE_KIND[kind]
+            ))
+        out_keys.append(table.keys)
+        out_tickets.append(table.tickets)
+        out_kbt.append(table.key_by_ticket)
+        out_count.append(table.count)
+        out_acc.append(dev_accs)
+
+    new_carry = ShardedCarry(
+        keys=jnp.stack(out_keys),
+        tickets=jnp.stack(out_tickets),
+        kbt=jnp.stack(out_kbt),
+        count=jnp.stack(out_count).reshape(-1).astype(jnp.int32),
+        ovf=jnp.full((new_ndev,), any_ovf, jnp.bool_),
+        acc=up.AggState(specs, tuple(
+            jnp.stack([out_acc[d][j] for d in range(new_ndev)])
+            for j in range(len(specs))
+        )),
+    )
+    return new_carry, new_max_local
+
+
 def sharded_psum_merge(mesh, axis: str, carry: ShardedCarry, *,
                        max_groups: int):
     """Dense-psum union merge of a streamed :class:`ShardedCarry` — steps
@@ -364,7 +478,7 @@ def sharded_exchange_merge(mesh, axis: str, carry: ShardedCarry, *,
         allv = jnp.stack(
             tuple(jax.tree_util.tree_map(lambda x: x[0], lacc).accs), axis=1
         )  # (max_local, V)
-        pid = (slot_hash(allk, ndev, seed=7)).astype(jnp.int32)
+        pid = partition_hash(allk, ndev, seed=7)
         pid = jnp.where(allk == EMPTY_KEY, ndev, pid)
         order = jnp.argsort(pid, stable=True)
         pk, pp = jnp.take(allk, order), jnp.take(pid, order)
@@ -614,7 +728,7 @@ def _partitioned_sharded_impl(
         allv = jnp.concatenate([ev, sv])
 
         # partition id by high hash bits (radix partition)
-        pid = (slot_hash(allk, ndev, seed=7)).astype(jnp.int32)
+        pid = partition_hash(allk, ndev, seed=7)
         pid = jnp.where(allk == EMPTY_KEY, ndev, pid)
 
         cap = partition_capacity or (2 * allk.shape[0] // ndev)

@@ -96,6 +96,22 @@ def slot_hash(keys: jnp.ndarray, table_size: int, seed: int = 0) -> jnp.ndarray:
     return (mixed & jnp.uint32(table_size - 1)).astype(jnp.int32)
 
 
+def partition_hash(keys: jnp.ndarray, n_parts: int, seed: int = 0) -> jnp.ndarray:
+    """Partition keys into ``n_parts`` buckets: :func:`slot_hash`'s mask for
+    a power-of-two part count, modulo of the mixed hash otherwise.
+
+    Device counts are the one partition width we cannot choose — a survivor
+    mesh after device loss can be any size — so the exchange/re-bucket rule
+    must accept arbitrary ``n_parts``.  The power-of-two branch is
+    bit-identical to ``slot_hash``, keeping existing layouts and committed
+    checkpoints stable.
+    """
+    if n_parts & (n_parts - 1) == 0:
+        return slot_hash(keys, n_parts, seed=seed)
+    mixed = xxhash32_mix(keys, seed=seed)
+    return (mixed % jnp.uint32(n_parts)).astype(jnp.int32)
+
+
 def fingerprint(keys: jnp.ndarray) -> jnp.ndarray:
     """16-bit fingerprint for two-level / iceberg-style designs."""
     return (murmur3_fmix32(keys) >> 16).astype(jnp.uint32)

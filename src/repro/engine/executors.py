@@ -1279,11 +1279,62 @@ class _ShardedExecutor(_ExecutorBase):
         self._events = None
         self.migrations = 0
         self.bound_grows = 0
+        self.remeshes = 0
         self._carry = None
         self._step = None
         self._rows = 0
         self.raw = None
         self._merged = None
+
+    @property
+    def mesh(self):
+        return self._plan.execution.mesh
+
+    def remesh(self, mesh, *, axis: str | None = None) -> None:
+        """Move the stream onto a DIFFERENT mesh at a chunk boundary — the
+        elastic device-loss recovery (engine/elastic.py drives it).  The
+        carried per-device state re-buckets onto the new device count
+        (``core.distributed.rebucket_sharded_carry``: the same all_to_all
+        key-partition rule as the exchange merge, duplicate keys folded with
+        their merge kind), the consume step recompiles for the new mesh
+        lazily, and consumption resumes exactly where it paused — results
+        stay bit-exact because every merge in the pipeline is key-wise.
+
+        The caller owns the chunk boundary: any in-flight ``consume_async``
+        tokens must be polled first (``StreamHandle`` drains them before a
+        re-mesh or a save)."""
+        from repro.core import distributed as dist
+
+        ex = self._plan.execution
+        axis = axis or ex.axis
+        new_ndev = mesh.shape[axis]
+        with obs_trace.span(
+            "remesh", strategy="sharded", old_ndev=self._ndev,
+            new_ndev=new_ndev,
+        ):
+            if self._carry is not None:
+                self._carry, self._max_local = dist.rebucket_sharded_carry(
+                    self._carry, new_ndev,
+                    load_factor=ex.load_factor, max_local=self._max_local,
+                )
+            if self._events is not None:
+                # keep event TOTALS: park the old planes' sum on device 0 of
+                # the survivor mesh (event_counts sums over devices anyway)
+                total = np.asarray(jax.device_get(self._events)).sum(axis=0)
+                self._events = (
+                    jnp.zeros((new_ndev, obs_metrics.EVENT_VEC_LEN), jnp.int32)
+                    .at[0].set(jnp.asarray(total, jnp.int32))
+                )
+            self._plan = replace(
+                self._plan, execution=replace(ex, mesh=mesh, axis=axis)
+            )
+            self._ndev = new_ndev
+            self._step = None  # recompiles for the new mesh on next consume
+            self.remeshes += 1
+        if obs_metrics.enabled():
+            obs_metrics.counter(
+                "elastic.remesh", strategy=self.strategy_label
+            ).add(1)
 
     def _ensure_state(self):
         from repro.core import distributed as dist
@@ -1549,6 +1600,7 @@ class _ShardedExecutor(_ExecutorBase):
         out = obs_metrics.event_vector_to_dict(ev.sum(axis=0))
         out["migrations"] = self.migrations
         out["bound_grows"] = self.bound_grows
+        out["remeshes"] = self.remeshes
         out["num_groups"] = int(counts.sum())  # pre-merge local groups
         out["table_capacity"] = int(self._carry.capacity) * self._ndev
         out["table_load_factor"] = float(counts.sum()) / (

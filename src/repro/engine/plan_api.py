@@ -198,6 +198,19 @@ class GroupByPlan:
         source)."""
         return self.stream(source).result()
 
+    def restore(self, path: str, source, *,
+                prefetch: int | None = None) -> "StreamHandle":
+        """Resume a stream from its newest :meth:`StreamHandle.save` commit
+        under ``path``: rebuild the executor state and fast-forward
+        ``source`` (replayed from its beginning — it must be re-iterable
+        with a stable chunk order) past the chunks the checkpoint already
+        aggregated.  The restoring plan must ask the same query; its mesh /
+        device count may differ (a sharded carry re-buckets onto this
+        plan's mesh).  See ``engine/elastic.py``."""
+        from repro.engine.elastic import restore_stream
+
+        return restore_stream(self, path, source, prefetch=prefetch)
+
 
 def iter_chunks(source) -> Iterator[Table]:
     """Canonicalize anything chunk-shaped into an iterator of ``Table``s:
@@ -323,6 +336,15 @@ class StreamHandle:
                 self._dispatch(chunk)
                 n += 1
         return n
+
+    def save(self, path: str, *, step: int | None = None) -> str:
+        """Checkpoint the live stream under ``path`` (atomic commit — a
+        crash mid-save never corrupts the previous commit) and keep
+        consuming.  Resume with :meth:`GroupByPlan.restore`, on the same
+        mesh or a different one.  Returns the committed directory."""
+        from repro.engine.elastic import save_stream
+
+        return save_stream(self, path, step=step)
 
     def snapshot(self) -> Table:
         """Materialize the groups aggregated so far WITHOUT closing the

@@ -201,6 +201,10 @@ class SpillExecutor(_ExecutorBase):
         self._rows = 0
         self._residency_bytes = self._device_bytes(self._op)
         self._peak_device_bytes = self._residency_bytes
+        # cold batches staged for asynchronous host flush: the device→host
+        # copy is STARTED at consume time (overlapping the device scan) and
+        # COLLECTED at the next poll/finalize/stats read (_flush_staged)
+        self._staged: list = []
 
     @staticmethod
     def _device_bytes(op: GroupByOperator) -> int:
@@ -231,14 +235,38 @@ class SpillExecutor(_ExecutorBase):
         )
         cold = valid & ~device_mask
         if cold.any():
-            cold_vals = {
-                c: np.asarray(jax.device_get(vals[c]))[cold] for c in self._vcols
-            }
-            self._manager.spill(keys_np[cold], pids[cold], cold_vals)
+            # Asynchronous flush: gather the cold rows on device and START
+            # the device→host copy now, so the transfer overlaps the scan
+            # the operator just dispatched; the blocking read happens at the
+            # next poll (keys/pids are already host-side from the routing
+            # probe above, so only the value columns ride the async copy).
+            cold_idx = jnp.asarray(np.flatnonzero(cold))
+            staged_vals = {c: vals[c][cold_idx] for c in self._vcols}
+            for a in staged_vals.values():
+                if hasattr(a, "copy_to_host_async"):
+                    a.copy_to_host_async()
+            self._staged.append((keys_np[cold], pids[cold], staged_vals))
         return token
 
     def poll(self, token) -> None:
         self._op.poll(token)
+        self._flush_staged()
+
+    def _flush_staged(self) -> None:
+        """Collect every staged cold batch into the host partitions.  Runs
+        at the chunk's poll (the copy has had the device scan to complete),
+        and as a settling barrier before finalize/stats/checkpoint — the
+        ``spill_flush_wait`` span is the wait the async overlap did NOT
+        hide."""
+        if not self._staged:
+            return
+        staged, self._staged = self._staged, []
+        with obs_trace.span("spill_flush_wait", batches=len(staged)):
+            for keys_cold, pids_cold, dvals in staged:
+                cold_vals = {
+                    c: np.asarray(jax.device_get(a)) for c, a in dvals.items()
+                }
+                self._manager.spill(keys_cold, pids_cold, cold_vals)
 
     def _admit(self, keys_np, valid, hits, pids):
         """Choose this chunk's NEW device admissions under the budget.
@@ -287,6 +315,7 @@ class SpillExecutor(_ExecutorBase):
         )
 
     def finalize(self) -> Table:
+        self._flush_staged()
         op = self._op
         parts = self._manager.partitions()
         if not parts:
@@ -347,6 +376,7 @@ class SpillExecutor(_ExecutorBase):
     # -- telemetry -----------------------------------------------------------
 
     def memory_stats(self) -> dict:
+        self._flush_staged()  # counters must reflect every consumed chunk
         s = super().memory_stats()
         s.update(self._manager.stats())
         s["peak_retained_bytes"] = max(

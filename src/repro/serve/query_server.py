@@ -34,18 +34,21 @@ instead of failing.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any
 
 from repro.engine.plan_api import GroupByPlan, SaturationPolicy, StreamHandle
+from repro.obs import metrics as obs_metrics
 from repro.serve.scheduler import (
     CANCELLED,
     DONE,
     FAILED,
+    QueueFullError,
     Scheduler,
     SlotHandle,
     TenantBudget,
 )
+from repro.train.elastic import WorkerFailure
 
 
 @dataclass
@@ -53,17 +56,89 @@ class _QueryTask:
     """``SlotTask`` over a :class:`StreamHandle`, plus the batched-dispatch
     group key.  Solo stepping pumps through the handle's prefetch window;
     group stepping pulls one chunk per live handle and folds them all in
-    one device launch."""
+    one device launch.
+
+    Fault tolerance (engine/elastic.py): before each quantum a sharded
+    stream whose mesh holds failed devices re-buckets onto the survivors in
+    place — the query keeps its state and keeps running while other tenants
+    keep stepping.  Any stream whose quantum raises
+    :class:`~repro.train.elastic.WorkerFailure` instead restores from its
+    last checkpoint commit (``checkpoint_dir``/``checkpoint_every`` on
+    ``submit``) — the non-sharded recovery path; with no commit to fall
+    back to, the failure propagates and the scheduler isolates it to this
+    slot."""
 
     handle: StreamHandle
     batch_key: Any = None
+    plan: GroupByPlan | None = None
+    source: Any = None
+    checkpoint_dir: str | None = None
+    checkpoint_every: int | None = None
+    tenant: str = "default"
+    remeshes: int = 0
+    restores: int = 0
+    _last_saved: int = field(default=0, repr=False)
 
     @property
     def done(self) -> bool:
         return self.handle.done
 
+    # -- recovery ------------------------------------------------------------
+
+    def _count(self, kind: str) -> None:
+        if obs_metrics.enabled():
+            obs_metrics.counter(
+                "serve.recovery", tenant=self.tenant, kind=kind
+            ).add(1)
+
+    def _maybe_remesh(self) -> None:
+        """Proactive loss check for meshed (sharded) streams: re-bucket onto
+        the survivor mesh at the quantum boundary.  Total loss falls through
+        to the checkpoint-restore path."""
+        from repro.engine import elastic as streams
+
+        mesh = streams.stream_mesh(self.handle)
+        if mesh is None or not streams.mesh_failed_ids(mesh):
+            return
+        try:
+            if streams.remesh_stream(self.handle):
+                self.remeshes += 1
+                self._count("remesh")
+        except WorkerFailure as err:
+            self._restore_from_checkpoint(err)
+
+    def _restore_from_checkpoint(self, err: WorkerFailure) -> None:
+        """Swap the handle for one restored from the last commit; with no
+        commit (or no checkpoint_dir) the failure propagates."""
+        from repro.checkpoint.manager import latest_commit_step
+
+        if (self.plan is None or self.checkpoint_dir is None
+                or latest_commit_step(self.checkpoint_dir) is None):
+            raise err
+        old = self.handle
+        self.handle = self.plan.restore(self.checkpoint_dir, self.source)
+        old.cancel()  # release the failed executor's device state
+        self._last_saved = self.handle.chunks_consumed
+        self.restores += 1
+        self._count("restore")
+
+    def _maybe_checkpoint(self) -> None:
+        h = self.handle
+        if (self.checkpoint_dir is None or not self.checkpoint_every
+                or h.closed or h.cancelled):
+            return
+        if h.chunks_consumed - self._last_saved >= self.checkpoint_every:
+            h.save(self.checkpoint_dir)
+            self._last_saved = h.chunks_consumed
+
     def step(self) -> None:
-        self.handle.step()
+        self._maybe_remesh()
+        try:
+            self.handle.step()
+        except WorkerFailure as err:
+            self._restore_from_checkpoint(err)
+            return
+        self._maybe_checkpoint()
 
     @staticmethod
     def step_batch(tasks: list["_QueryTask"]) -> None:
@@ -88,20 +163,31 @@ class _QueryTask:
         )
 
     def finish(self):
-        return self.handle.finish()
+        self._maybe_remesh()
+        try:
+            return self.handle.finish()
+        except WorkerFailure as err:
+            self._restore_from_checkpoint(err)
+            return self.handle.finish()
 
     def cancel(self) -> None:
         self.handle.cancel()
 
 
 class QueryHandle:
-    """One live (or finished) query on the server."""
+    """One live (or finished) query on the server.  Reads its stream
+    through the slot task, so a recovery that swaps the underlying handle
+    (checkpoint restore) stays transparent to the caller."""
 
     def __init__(self, server: "AggregationServer", slot: SlotHandle,
-                 stream: StreamHandle):
+                 task: _QueryTask):
         self._server = server
         self._slot = slot
-        self._stream = stream
+        self._task = task
+
+    @property
+    def _stream(self) -> StreamHandle:
+        return self._task.handle
 
     @property
     def tenant(self) -> str:
@@ -153,6 +239,10 @@ class QueryHandle:
             "device_table_bytes": stats.get("device", {}).get(
                 "device_table_bytes", 0
             ),
+            "recoveries": {
+                "remeshes": self._task.remeshes,
+                "restores": self._task.restores,
+            },
             "stats": stats,
         }
 
@@ -190,15 +280,21 @@ class AggregationServer:
     # -- tenants ------------------------------------------------------------
 
     def set_budget(self, tenant: str, *, max_groups: int | None = None,
-                   weight: int = 1, max_steps: int | None = None) -> None:
+                   weight: int = 1, max_steps: int | None = None,
+                   max_queue_depth: int | None = None) -> None:
         """Per-tenant contract: ``weight`` quanta per round-robin turn,
         ``max_steps`` hard scheduling budget, ``max_groups`` hard per-query
         cardinality cap (enforced through ``SaturationPolicy.RAISE``; a
         ``saturation="spill"`` plan instead treats the cap as its device
-        residency budget and completes exactly by spilling to host)."""
+        residency budget and completes exactly by spilling to host), and
+        ``max_queue_depth`` admission control — a ``submit`` that would put
+        more than that many of the tenant's queries in the waiting queue is
+        refused with :class:`~repro.serve.scheduler.QueueFullError`."""
         self.scheduler.set_budget(
             tenant,
-            TenantBudget(weight=weight, max_steps=max_steps, max_groups=max_groups),
+            TenantBudget(weight=weight, max_steps=max_steps,
+                         max_groups=max_groups,
+                         max_queue_depth=max_queue_depth),
         )
 
     def tenant_stats(self, tenant: str) -> dict:
@@ -224,18 +320,36 @@ class AggregationServer:
         return plan.with_(max_groups=capped, saturation=SaturationPolicy.RAISE)
 
     def submit(self, plan: GroupByPlan, source, *, tenant: str = "default",
-               prefetch: int | None = None) -> QueryHandle:
+               prefetch: int | None = None,
+               checkpoint_dir: str | None = None,
+               checkpoint_every: int | None = None) -> QueryHandle:
         """Admit a streaming GROUP BY: free slot → runs on the next
         scheduling round; otherwise queued until a slot frees.  Nothing is
-        consumed from ``source`` until the query is stepped."""
+        consumed from ``source`` until the query is stepped.
+
+        ``checkpoint_dir`` (+ ``checkpoint_every`` chunks) arms the
+        restore-on-failure recovery path: the query checkpoints its
+        executor state on that cadence, and a quantum that raises
+        :class:`~repro.train.elastic.WorkerFailure` resumes from the last
+        commit instead of failing the slot (requires a re-iterable
+        ``source``; see engine/elastic.py).  Sharded streams additionally
+        re-mesh onto surviving devices in place, checkpoint or not."""
         from repro.engine.executors import batch_signature
 
         plan = self._apply_budget(plan, tenant)
         sig = batch_signature(plan) if self.batch_queries else None
         stream = plan.stream(source, prefetch=prefetch)
-        task = _QueryTask(stream, batch_key=sig)
-        slot = self.scheduler.submit(task, tenant=tenant)
-        return QueryHandle(self, slot, stream)
+        task = _QueryTask(
+            stream, batch_key=sig, plan=plan, source=source,
+            checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+            tenant=tenant,
+        )
+        try:
+            slot = self.scheduler.submit(task, tenant=tenant)
+        except QueueFullError:
+            stream.cancel()  # admission refused: release executor state
+            raise
+        return QueryHandle(self, slot, task)
 
     # -- driving ------------------------------------------------------------
 
@@ -258,4 +372,4 @@ class AggregationServer:
         return self.scheduler.idle
 
 
-__all__ = ["AggregationServer", "QueryHandle"]
+__all__ = ["AggregationServer", "QueryHandle", "QueueFullError"]

@@ -80,15 +80,26 @@ class TenantBudget:
     max_groups: per-query cardinality cap, enforced at admission by the
                 query server through ``SaturationPolicy.RAISE`` — the
                 scheduler itself never inspects query semantics.
+    max_queue_depth: admission control beyond the slot count — the most
+                tasks this tenant may have WAITING (queued, not yet in a
+                slot).  ``submit`` past the bound raises
+                :class:`QueueFullError` instead of growing the queue
+                without limit; the caller sheds load or retries later.
     """
 
     weight: int = 1
     max_steps: int | None = None
     max_groups: int | None = None
+    max_queue_depth: int | None = None
 
 
 class BudgetExceededError(RuntimeError):
     """A tenant's scheduling budget (``TenantBudget.max_steps``) ran out."""
+
+
+class QueueFullError(RuntimeError):
+    """A tenant's waiting queue is at ``TenantBudget.max_queue_depth``;
+    the submission was refused (nothing was enqueued)."""
 
 
 class TaskCancelledError(RuntimeError):
@@ -205,13 +216,33 @@ class Scheduler:
     # -- admission ----------------------------------------------------------
 
     def submit(self, task: SlotTask, *, tenant: str = "default") -> SlotHandle:
-        """Admit into a free slot, or queue until one frees."""
+        """Admit into a free slot, or queue until one frees.  A tenant at
+        its ``max_queue_depth`` waiting bound is refused with
+        :class:`QueueFullError` (nothing enqueued) — backpressure instead
+        of an unbounded queue."""
+        cap = self._budgets.get(tenant)
+        if cap is not None and cap.max_queue_depth is not None:
+            waiting = sum(1 for h in self._queue if h.tenant == tenant)
+            if waiting >= cap.max_queue_depth:
+                if obs_metrics.enabled():
+                    obs_metrics.counter(
+                        "scheduler.rejected", tenant=tenant
+                    ).add(1)
+                raise QueueFullError(
+                    f"tenant {tenant!r} has {waiting} queued tasks, at its "
+                    f"max_queue_depth={cap.max_queue_depth}; retry after the "
+                    "backlog drains or raise the budget"
+                )
         handle = SlotHandle(task=task, tenant=tenant)
         if tenant not in self._tenant_steps:
             self._tenant_steps[tenant] = 0
             self._tenant_order.append(tenant)
         self._queue.append(handle)
         self._admit()
+        if obs_metrics.enabled():
+            obs_metrics.gauge("scheduler.queue_depth", tenant=tenant).set(
+                sum(1 for h in self._queue if h.tenant == tenant)
+            )
         return handle
 
     def _admit(self) -> None:
@@ -382,6 +413,7 @@ class Scheduler:
 
 __all__ = [
     "BudgetExceededError",
+    "QueueFullError",
     "Scheduler",
     "SlotHandle",
     "SlotTask",

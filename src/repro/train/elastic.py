@@ -33,6 +33,12 @@ def reset_failures():
     _failed.clear()
 
 
+def failed_ids() -> frozenset:
+    """The currently marked-failed device ids (the engine's elastic streams
+    read this to detect loss on a query mesh — engine/elastic.py)."""
+    return frozenset(_failed)
+
+
 def available_devices():
     return [d for d in jax.devices() if d.id not in _failed]
 
