@@ -1,0 +1,171 @@
+"""Fused-kernel benchmark — the ``ExecutionPolicy.kernel`` routes head to
+head, and the fused route's acceptance gates.
+
+The paper's low-cardinality regime is the fused kernel's home turf: the
+whole table + accumulators fit in VMEM, so carrying them across chunks
+(fused) beats rebuilding + merging a fresh kernel table per chunk (split)
+and avoids the ticket vector's HBM round trip between the two split
+launches.  Points:
+
+  * ``fits`` — low cardinality (1 000 groups), a chunked stream with
+    COUNT+SUM: ``kernel="fused"`` vs ``kernel="split"`` vs
+    ``kernel="scan_body"`` vs the plain scan pipeline (``"off"``).  Gates:
+    - ``exact``: the fused result matches ``groupby_oracle`` COUNT/SUM
+      bit-for-bit (integer-valued f32 values, so summation order cannot
+      hide a wrong merge);
+    - ``fused_vs_split_speedup``: fused must beat split ≥ 1.3× — the
+      retire-the-split-route criterion.
+  * ``nofit`` — cardinality far past the VMEM budget: the planner's
+    ``choose_plan`` must NOT pick fused (``planner_fallback`` gate), and
+    the scan pipeline the plan falls back to stays exact.
+
+Emits ``common.emit`` CSV; ``--json PATH`` writes the raw numbers
+(CI uploads ``BENCH_fused.json`` per PR and gates it against the committed
+baseline via ``check_regression.py``).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.common import N_ROWS, emit, gate, time_fn, write_bench_json
+from repro.core import adaptive, groupby_oracle
+from repro.engine import AggSpec, ExecutionPolicy, GroupByPlan, Table
+
+LOW_CARD = 1000
+CHUNKS = 8
+MORSEL = 1024
+SPEEDUP_GATE = 1.3
+
+
+def _data(n: int, card: int, seed: int = 7):
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, card, size=n).astype(np.uint32)
+    # integer-valued f32: any summation order is exact below 2**24
+    vals = rng.integers(0, 100, size=n).astype(np.float32)
+    return keys, vals
+
+
+def _chunked(keys, vals, chunks=CHUNKS):
+    step = keys.shape[0] // chunks
+    for i in range(0, keys.shape[0], step):
+        yield Table({"k": jnp.asarray(keys[i:i + step]),
+                     "v": jnp.asarray(vals[i:i + step])})
+
+
+def _plan(kernel, max_groups):
+    return GroupByPlan(
+        keys=("k",), aggs=(AggSpec("count"), AggSpec("sum", "v")),
+        strategy="concurrent", max_groups=max_groups, saturation="raise",
+        raw_keys=True,
+        execution=ExecutionPolicy(kernel=kernel, morsel_size=MORSEL),
+    )
+
+
+def _result_maps(out):
+    n = int(out["__num_groups__"][0])
+    keys = np.asarray(out["key"])[:n]
+    return (
+        dict(zip(keys.tolist(), np.asarray(out["count(*)"])[:n].tolist())),
+        dict(zip(keys.tolist(), np.asarray(out["sum(v)"])[:n].tolist())),
+    )
+
+
+def _oracle_maps(keys, vals, card):
+    out = {}
+    for kind, v in (("count", None), ("sum", jnp.asarray(vals))):
+        ref = groupby_oracle(jnp.asarray(keys), v, kind=kind, max_groups=card)
+        m = int(ref.num_groups)
+        out[kind] = dict(zip(np.asarray(ref.keys)[:m].tolist(),
+                             np.asarray(ref.values)[:m].tolist()))
+    return out["count"], out["sum"]
+
+
+def run(n: int | None = None, json_path: str | None = None):
+    n = n or N_ROWS
+    results = {"n_rows": n, "cardinality": LOW_CARD, "chunks": CHUNKS,
+               "morsel_size": MORSEL}
+
+    # --- fits-in-VMEM low-cardinality point: the kernel= routes ------------
+    keys, vals = _data(n, LOW_CARD)
+    bound = 2 * LOW_CARD
+    ref_counts, ref_sums = _oracle_maps(keys, vals, LOW_CARD)
+    times = {}
+    exact = True
+    for kernel in ("fused", "split", "scan_body", "off"):
+        plan = _plan(kernel, bound)
+        out = plan.stream(_chunked(keys, vals)).result()
+        counts, sums = _result_maps(out)
+        ok = counts == ref_counts and sums == ref_sums
+        if kernel == "fused":
+            exact = ok
+        us = time_fn(
+            lambda plan=plan: plan.stream(_chunked(keys, vals))
+            .result().columns,
+            warmup=1, runs=3,
+        )
+        times[kernel] = us
+        results[f"{kernel}_us"] = us
+        emit(f"fused_route_{kernel}", us,
+             f"card={LOW_CARD} exact={'yes' if ok else 'NO'}")
+
+    speedup = times["split"] / max(times["fused"], 1e-9)
+    results["fused_vs_split_speedup"] = speedup
+    results["fused_vs_scan_speedup"] = times["off"] / max(times["fused"], 1e-9)
+    results["exact"] = exact
+    emit("fused_vs_split_speedup", speedup,
+         f"gate ≥{SPEEDUP_GATE} "
+         f"{'PASS' if speedup >= SPEEDUP_GATE else 'FAIL'}")
+
+    # --- does-not-fit point: the planner must fall back --------------------
+    # fused state at 2× the estimate must exceed the planner's table budget
+    nofit_card = max(n // 4, 1 << 20)
+    budget = adaptive.VMEM_BYTES // 4
+    choice = adaptive.choose_plan(
+        adaptive.WorkloadStats(n_rows=n, est_groups=nofit_card,
+                               est_top_freq=0.0),
+        num_accumulators=2, vmem_budget=budget,
+    )
+    fallback = choice.kernel is None
+    results["nofit_cardinality"] = nofit_card
+    results["nofit_table_bytes"] = adaptive.fused_table_bytes(2 * nofit_card, 2)
+    results["planner_fallback"] = fallback
+    emit("fused_planner_fallback", 1.0 if fallback else 0.0,
+         f"card={nofit_card} table_bytes={results['nofit_table_bytes']} "
+         f"budget={budget} -> kernel={choice.kernel!r}")
+
+    # the fallback pipeline itself stays exact at a beyond-budget cardinality
+    hi_card = min(nofit_card, n)
+    keys_hi, vals_hi = _data(n, hi_card, seed=11)
+    out = _plan(None, n).stream(_chunked(keys_hi, vals_hi)).result()
+    counts, sums = _result_maps(out)
+    rc, rs = _oracle_maps(keys_hi, vals_hi, hi_card)
+    nofit_exact = counts == rc and sums == rs
+    results["nofit_exact"] = nofit_exact
+    emit("fused_nofit_exact", 1.0 if nofit_exact else 0.0,
+         f"scan fallback at card={hi_card}")
+
+    gates = {
+        "fused_vs_split_speedup": gate(speedup, ">=", SPEEDUP_GATE),
+        "exact": gate(exact, "==", True),
+        "planner_fallback": gate(fallback, "==", True),
+        "nofit_exact": gate(nofit_exact, "==", True),
+    }
+    if json_path:
+        write_bench_json(json_path, "fused", results, gates)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--rows", type=int, default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived", flush=True)
+    run(n=args.rows, json_path=args.json)

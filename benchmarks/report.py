@@ -142,6 +142,34 @@ def spill_table(path):
               f"(baseline {r['inmemory_us']/1e3:.1f} ms) | | | |")
 
 
+def fused_table(path):
+    with open(path) as f:
+        r = json.load(f)
+    print(f"Rows: {r.get('n_rows', '—')}, {r.get('cardinality', '—')} groups, "
+          f"{r.get('chunks', '—')} chunks (fits-in-VMEM point)\n")
+    print("| kernel route | time | vs fused |")
+    print("|---|---|---|")
+    fused_us = r.get("fused_us")
+    for kernel in ("fused", "split", "scan_body", "off"):
+        us = r.get(f"{kernel}_us")
+        if us is None:
+            continue
+        rel = f"{us / fused_us:.2f}×" if fused_us else "—"
+        print(f"| {kernel} | {us/1e3:.1f} ms | {rel} |")
+    sp = r.get("fused_vs_split_speedup")
+    if sp is not None:
+        print(f"| fused vs split gate | {sp:.2f}× | "
+              f"{'PASS' if sp >= 1.3 else 'FAIL'} ≥1.3× |")
+    print(f"| exact vs oracle | {'yes' if r.get('exact') else 'NO'} | |")
+    if "planner_fallback" in r:
+        print(
+            f"| planner fallback at card={r.get('nofit_cardinality')} | "
+            f"{'yes' if r.get('planner_fallback') else 'NO'} "
+            f"({r.get('nofit_table_bytes', 0) / 2**20:.0f} MiB table) | "
+            f"exact={'yes' if r.get('nofit_exact') else 'NO'} |"
+        )
+
+
 def elasticity_table(path):
     with open(path) as f:
         r = json.load(f)
@@ -208,13 +236,16 @@ def main():
     ap.add_argument("--dir", default="experiments/dryrun")
     ap.add_argument("--section", default="both",
                     choices=["dryrun", "roofline", "streaming", "serving",
-                             "spill", "elasticity", "operational", "both"])
+                             "spill", "fused", "elasticity", "operational",
+                             "both"])
     ap.add_argument("--stream-json", default="BENCH_stream.json",
                     help="bench_stream artifact for §Streaming")
     ap.add_argument("--serve-json", default="BENCH_serve.json",
                     help="bench_serve artifact for §Serving")
     ap.add_argument("--spill-json", default="BENCH_spill.json",
                     help="bench_spill artifact for §Spill")
+    ap.add_argument("--fused-json", default="BENCH_fused.json",
+                    help="bench_fused artifact for §Fused-kernel routes")
     ap.add_argument("--elastic-json", default="BENCH_elastic.json",
                     help="bench_elastic artifact for §Elasticity")
     args = ap.parse_args()
@@ -238,6 +269,10 @@ def main():
     if args.section in ("spill", "both") and os.path.exists(args.spill_json):
         print("### Out-of-core spill (bench_spill)\n")
         spill_table(args.spill_json)
+        print()
+    if args.section in ("fused", "both") and os.path.exists(args.fused_json):
+        print("### Fused VMEM-resident kernel (bench_fused)\n")
+        fused_table(args.fused_json)
         print()
     if args.section in ("elasticity", "both") and os.path.exists(args.elastic_json):
         print("### Fault tolerance & elasticity (bench_elastic)\n")

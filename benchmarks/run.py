@@ -19,6 +19,7 @@ def main() -> None:
         bench_breakdown,
         bench_e2e,
         bench_elastic,
+        bench_fused,
         bench_hybrid,
         bench_memory,
         bench_plan,
@@ -50,6 +51,8 @@ def main() -> None:
             n=n, json_path=os.environ.get("BENCH_SERVE_JSON"))),
         ("spill", lambda: bench_spill.run(
             n=n, json_path=os.environ.get("BENCH_SPILL_JSON"))),
+        ("fused", lambda: bench_fused.run(
+            n=n, json_path=os.environ.get("BENCH_FUSED_JSON"))),
         ("elastic", lambda: bench_elastic.run(
             n=n, json_path=os.environ.get("BENCH_ELASTIC_JSON"))),
         ("roofline", bench_roofline.run),

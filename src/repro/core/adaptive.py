@@ -41,27 +41,64 @@ class Plan:
     update: str      # scatter | onehot | sort_segment | serialized
     distributed: str  # dense_psum | all_to_all
     capacity: int    # ticket table capacity (pow2)
+    kernel: str | None = None  # fused | None (planner's ExecutionPolicy.kernel pick)
 
 
-def choose_plan(stats: WorkloadStats) -> Plan:
+#: VMEM per TensorCore on the TPU generations we target (bytes).  The fused
+#: kernel must co-house its table, ticket map and accumulators with the
+#: morsel blocks and compiler scratch, so the planner only claims a quarter.
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def fused_table_bytes(est_groups: int, num_accumulators: int = 1,
+                      load_factor: float = 0.5) -> int:
+    """Device bytes of ONE fused-kernel program's persistent state at a
+    group bound: open-addressed table (keys + tickets, int32 each at
+    ``capacity = est_groups / load_factor`` rounded to pow2), the
+    ticket→key map, and one float32 accumulator row per ``AggSpec``
+    accumulator (mean counts twice: sum + count)."""
+    cap = table_capacity(max(est_groups, 1), load_factor)
+    return 8 * cap + 4 * est_groups + 4 * num_accumulators * est_groups
+
+
+def kernel_table_budget() -> int:
+    """VMEM bytes the planner lets a fused table claim: a quarter of VMEM on
+    TPU, 0 elsewhere — in interpret mode the fused route is correct but has
+    no residency advantage, so off-TPU plans keep the scan pipeline unless
+    the caller sets ``ExecutionPolicy.kernel`` (or a ``vmem_budget``)
+    explicitly."""
+    return VMEM_BYTES // 4 if jax.default_backend() == "tpu" else 0
+
+
+def choose_plan(stats: WorkloadStats, *, num_accumulators: int = 1,
+                vmem_budget: int | None = None) -> Plan:
     unique_frac = stats.est_groups / max(stats.n_rows, 1)
     heavy = stats.est_top_freq >= 0.25
     cap = table_capacity(stats.est_groups)
+    budget = kernel_table_budget() if vmem_budget is None else vmem_budget
+    # bound the fused fit check at the 2× headroom the resolver actually
+    # binds, so a fused pick doesn't immediately outgrow VMEM
+    fused = (
+        "fused"
+        if fused_table_bytes(2 * stats.est_groups, num_accumulators) <= budget
+        else None
+    )
 
     if stats.key_domain is not None and stats.key_domain <= 2 * stats.est_groups:
         # direct ticketing: ticket == key, so capacity only needs the domain
         return Plan("direct", "scatter", "dense_psum", table_capacity(stats.key_domain, load_factor=1.0))
     if stats.est_groups <= 4096:
-        # Low cardinality: MXU one-hot update is contention-free and the
-        # matmul is small; dense psum merge is tiny.
-        return Plan("hash", "onehot", "dense_psum", cap)
+        # Low cardinality: the whole table + accumulators sit in VMEM, the
+        # fused kernel's home turf; otherwise MXU one-hot update is
+        # contention-free and the matmul is small; dense psum merge is tiny.
+        return Plan("hash", "onehot", "dense_psum", cap, fused)
     if unique_frac >= 0.8 and not heavy:
         # Near-unique keys, no skew: ticketing is pure insert; sort-based
         # grouping and a partitioned exchange avoid building a 2× table.
         return Plan("sort", "sort_segment", "all_to_all", cap)
     # General case (the paper's recommended default): concurrent with
     # thread-local/dense merge — resilient to skew at every cardinality.
-    return Plan("hash", "scatter", "dense_psum", cap)
+    return Plan("hash", "scatter", "dense_psum", cap, fused)
 
 
 class RunningStats:

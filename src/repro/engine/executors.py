@@ -51,6 +51,7 @@ residency and host-spilled cold partitions, merged exactly at finalize.
 from __future__ import annotations
 
 import functools
+import warnings
 from dataclasses import replace
 
 import jax
@@ -77,12 +78,75 @@ from repro.engine.plan_api import (
 )
 
 
+# ---------------------------------------------------------------------------
+# kernel-selector normalization: ExecutionPolicy.kernel is THE selector; the
+# legacy spellings lower onto it here, warning once per process per alias.
+
+_ALIAS_WARNED: set = set()
+
+
+def _warn_alias_once(alias: str, repl: str) -> None:
+    if alias in _ALIAS_WARNED:
+        return
+    _ALIAS_WARNED.add(alias)
+    warnings.warn(
+        f"{alias} is deprecated; use ExecutionPolicy.kernel={repl!r}",
+        DeprecationWarning,
+        stacklevel=4,
+    )
+
+
+def reset_kernel_alias_warnings() -> None:
+    """Re-arm the once-per-process alias warnings (test helper)."""
+    _ALIAS_WARNED.clear()
+
+
+def normalize_kernel(plan: GroupByPlan) -> GroupByPlan:
+    """Lower the deprecated kernel spellings onto ``ExecutionPolicy.kernel``:
+    ``strategy="pallas"`` → ``concurrent`` + ``kernel="split"`` and
+    ``use_kernel=True`` → ``kernel="scan_body"`` (an explicit ``kernel``
+    wins over either alias).  Idempotent — normalized plans pass through
+    untouched, so re-entrant dispatch (auto resolution) never double-warns."""
+    ex = plan.execution
+    strategy, kernel, changed = plan.strategy, ex.kernel, False
+    if strategy == "pallas":
+        _warn_alias_once('strategy="pallas"', "split")
+        strategy = "concurrent"
+        kernel = kernel or "split"
+        changed = True
+    if ex.use_kernel:
+        _warn_alias_once("ExecutionPolicy.use_kernel", "scan_body")
+        kernel = kernel or "scan_body"
+        changed = True
+    if changed:
+        plan = replace(
+            plan, strategy=strategy,
+            execution=replace(ex, kernel=kernel, use_kernel=False),
+        )
+    return plan
+
+
 def make_executor(plan: GroupByPlan):
     """Lower a plan to its executor.  ``strategy="auto"`` (or an unset
     ``max_groups``) defers to a resolving wrapper that samples the first
     chunk's keys and re-dispatches — the paper's estimate → choose → run —
     and keeps running statistics across the stream for mid-stream
     re-planning."""
+    plan = normalize_kernel(plan)
+    kernel = plan.execution.kernel
+    if kernel in ("split", "fused"):
+        if plan.strategy not in ("auto", "concurrent"):
+            raise ValueError(
+                f"kernel={kernel!r} runs on the concurrent hash pipeline; "
+                f"strategy {plan.strategy!r} does not support it"
+            )
+        if plan.execution.ticketing != "hash":
+            raise ValueError(f"kernel={kernel!r} requires ticketing='hash'")
+        if plan.saturation == SaturationPolicy.SPILL:
+            raise ValueError(
+                "saturation='spill' runs on the scan pipeline; use "
+                "kernel=None/'off'/'scan_body'"
+            )
     if plan.saturation is None:
         # THE saturation default: an estimated bound recovers (a sample
         # cannot see a long tail); an explicit bound is a caller contract.
@@ -113,11 +177,13 @@ def make_executor(plan: GroupByPlan):
             return _SortExecutor(plan)
         if plan.execution.ticketing == "direct":
             return _DirectExecutor(plan)
+        if kernel == "split":
+            return _PallasExecutor(plan)
+        if kernel == "fused":
+            return _FusedExecutor(plan)
         return _ScanExecutor(plan)
     if plan.strategy == "hybrid":
         return _HybridExecutor(plan)
-    if plan.strategy == "pallas":
-        return _PallasExecutor(plan)
     if plan.strategy == "partitioned":
         return _PartitionedExecutor(plan)
     if plan.strategy == "sharded":
@@ -299,7 +365,9 @@ def resolve_plan_stats(plan: GroupByPlan, stats: adaptive.WorkloadStats) -> Grou
             strategy = "hybrid"
             update = execution.update or "scatter"
         else:
-            choice = adaptive.choose_plan(stats)
+            choice = adaptive.choose_plan(
+                stats, num_accumulators=len(expand_agg_specs(plan.aggs))
+            )
             strategy = "concurrent"
             update = execution.update or (
                 "sort_segment" if choice.ticketing == "sort" else choice.update
@@ -311,6 +379,11 @@ def resolve_plan_stats(plan: GroupByPlan, stats: adaptive.WorkloadStats) -> Grou
                     execution, ticketing="direct",
                     key_domain=execution.key_domain or stats.key_domain,
                 )
+            elif (choice.kernel == "fused" and execution.kernel is None
+                    and execution.ticketing == "hash"):
+                # estimated table + accumulators fit the VMEM budget: run
+                # the single fused kernel instead of the scan pipeline
+                execution = replace(execution, kernel="fused")
         execution = replace(execution, update=update)
     return replace(plan, strategy=strategy, max_groups=max_groups, execution=execution)
 
@@ -448,7 +521,8 @@ class _ScanExecutor(_ExecutorBase):
         self._op = GroupByOperator(
             key_columns=list(p.keys), aggs=list(p.aggs), max_groups=p.max_groups,
             morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
-            use_kernel=ex.use_kernel, load_factor=ex.load_factor,
+            use_kernel=ex.kernel == "scan_body" or ex.use_kernel,
+            load_factor=ex.load_factor,
             pipeline=ex.pipeline, capacity=ex.capacity, raw_keys=p.raw_keys,
             check_overflow=p.saturation != SaturationPolicy.UNCHECKED,
             grow_bound=p.saturation == SaturationPolicy.GROW,
@@ -517,6 +591,7 @@ def batch_signature(plan: GroupByPlan):
         or ex.ticketing != "hash"
         or ex.pipeline != "scan"
         or ex.use_kernel
+        or ex.kernel not in (None, "off")
         or saturation not in (SaturationPolicy.RAISE, SaturationPolicy.UNCHECKED)
     ):
         return None
@@ -1125,11 +1200,14 @@ class _IncrementalMergeExecutor(_ExecutorBase):
 
 
 class _PallasExecutor(_IncrementalMergeExecutor):
-    """Strategy ``pallas``: the VMEM-resident ticket kernel + segment-update
-    kernel (kernels/ops.py) launched per chunk; the kernel's table state
-    lives only for one launch, so each chunk's bounded result merges into
-    the carried table.  GROW re-launches the CHUNK with a grown
-    bound/capacity (migrate == rebuild here) — never the stream."""
+    """``kernel="split"`` (legacy strategy ``pallas``): the VMEM-resident
+    ticket kernel + segment-update kernel (kernels/ops.py) launched per
+    chunk; the kernel's table state lives only for one launch, so each
+    chunk's bounded result merges into the carried table.  GROW re-launches
+    the CHUNK with a grown bound/capacity (migrate == rebuild here) — never
+    the stream.  The fused route (:class:`_FusedExecutor`) supersedes this
+    for production use: it carries the table ACROSS chunks in VMEM instead
+    of rebuilding + merging per chunk."""
 
     strategy_label = "pallas"
 
@@ -1146,7 +1224,7 @@ class _PallasExecutor(_IncrementalMergeExecutor):
         p, ex = self._plan, self._plan.execution
         bound, capacity = self._chunk_bound, self._capacity
         while True:
-            tickets, kbt, count = kops.ticket(
+            tickets, kbt, count = kops._ticket(
                 keys, capacity=capacity, max_groups=bound,
                 morsel_size=ex.morsel_size, interpret=ex.interpret,
             )
@@ -1177,12 +1255,232 @@ class _PallasExecutor(_IncrementalMergeExecutor):
         partials = {}
         for col, kind in self._specs:
             v = vals[col] if col else jnp.ones(keys.shape, jnp.float32)
-            partials[(col, kind)] = kops.segment_aggregate(
+            partials[(col, kind)] = kops._segment_aggregate(
                 tickets, v, num_groups=bound, kind=kind,
                 strategy=ex.update or "scatter", morsel_size=ex.morsel_size,
                 interpret=ex.interpret,
             )
         return kbt, partials, count, ovf
+
+
+class _FusedExecutor(_ExecutorBase):
+    """``kernel="fused"``: THE production Pallas route — ticketing and
+    aggregation fused in one VMEM-resident kernel (kernels/fused_groupby.py)
+    whose table + accumulators persist ACROSS chunks as carried device
+    state, exactly like the scan pipeline carries its TicketTable.  Nothing
+    is rebuilt or merged per chunk; the only per-chunk work is the morsels
+    themselves.
+
+    ``kernel_programs > 1`` runs per-grid-program local tables (two-level
+    design); ``finalize``/``snapshot`` perform the second-level merge into
+    one global ticket space.  Saturation rides the kernel's §4.4 info
+    vector: ``poll`` reads the per-program halt signals once per chunk (the
+    scan route's sync cadence), grows bound/capacity host-side via
+    ``grow_fused_state`` (table migration preserves tickets, so committed
+    aggregates are untouched) and relaunches the chunk at each program's
+    first halted morsel.  RAISE surfaces the same sticky overflow as the
+    scan pipeline; UNCHECKED never syncs."""
+
+    strategy_label = "fused"
+
+    def __init__(self, plan: GroupByPlan):
+        from repro.kernels import fused_groupby as fk
+
+        self._fk = fk
+        self._plan = plan
+        ex = plan.execution
+        self._specs = expand_agg_specs(plan.aggs)
+        self._kinds = tuple(k for _, k in self._specs)
+        self._vcols = tuple(value_columns(plan.aggs))
+        # accumulator → value-plane map (-1: count consumes no plane — a
+        # mean's count half carries its column name but still counts rows)
+        self._kspecs = tuple(
+            (-1 if kind == "count" or not col else self._vcols.index(col), kind)
+            for col, kind in self._specs
+        )
+        self._m = ex.morsel_size
+        self._P = ex.kernel_programs
+        self._lf = ex.load_factor
+        self._interpret = ex.interpret
+        self._checked = plan.saturation != SaturationPolicy.UNCHECKED
+        self._grow = plan.saturation == SaturationPolicy.GROW
+        self._collect = _instrument(plan)
+        self._rows = 0
+        self._migrations = 0
+        self._bound_grows = 0
+        self._state = fk.init_fused_state(
+            capacity=ex.capacity or table_capacity(plan.max_groups, self._lf),
+            max_groups=plan.max_groups,
+            kinds=self._kinds,
+            programs=self._P,
+        )
+        self._info = None        # (P, INFO_LEN) control vector, latest launch
+        # FIFO of launches whose halt signals are unread:
+        # [km, vm, info, grow_gen].  Prefetch dispatches chunk k+1 before
+        # chunk k's poll, so a grow pause must be able to replay EVERY
+        # chunk launched since the last drain, each from its own recorded
+        # halt morsel — a single last-chunk slot would drop the earlier
+        # chunk's unreplayed tail.
+        self._pending: list = []
+        self._grow_gen = 0       # bumps per grow; stamps pending launches
+
+    def _morselize(self, keys, vals):
+        """Pad + reshape one chunk into (P·npm, M) key morsels and
+        (V, P·npm, M) value planes; program ``p`` owns the contiguous
+        morsel range [p·npm, (p+1)·npm)."""
+        n = keys.shape[0]
+        step = self._m * self._P
+        pad = (-n) % step
+        k = keys.astype(jnp.uint32)
+        if pad:
+            k = jnp.concatenate([k, jnp.full((pad,), EMPTY_KEY, jnp.uint32)])
+        km = k.astype(jnp.int32).reshape(-1, self._m)
+        if self._vcols:
+            planes = []
+            for c in self._vcols:
+                v = vals[c]
+                if pad:
+                    v = jnp.concatenate([v, jnp.zeros((pad,), jnp.float32)])
+                planes.append(v.reshape(-1, self._m))
+            vm = jnp.stack(planes)
+        else:
+            # the kernel's value operand needs ≥1 plane; count-only plans
+            # never read it (plane index -1)
+            vm = jnp.zeros((1, km.shape[0], self._m), jnp.float32)
+        return km, vm
+
+    def _launch(self, km, vm, starts) -> None:
+        st = self._state
+        self._state, self._info = self._fk.fused_consume(
+            st, km, vm, starts,
+            specs=self._kspecs,
+            checked=self._checked,
+            grow_bound=self._grow,
+            # NOT clamped at 0: a bound below the morsel size must pause the
+            # very first morsel (count 0 > negative slack) — running it
+            # would issue tickets past the bound and drop their
+            # key_by_ticket scatters, losing keys that GROW cannot recover
+            threshold=int(self._lf * st.capacity),
+            bound_slack=st.max_groups - self._m,
+            collect_events=self._collect,
+            interpret=self._interpret,
+        )
+
+    def consume_async(self, chunk: Table):
+        keys, vals = _chunk_keys_values(self._plan, chunk)
+        self._rows += int(keys.shape[0])
+        km, vm = self._morselize(keys, vals)
+        self._launch(km, vm, jnp.zeros((self._P,), jnp.int32))
+        if self._checked:
+            self._pending.append([km, vm, self._info, self._grow_gen])
+        return self._info
+
+    def consume(self, chunk: Table) -> None:
+        self.poll(self.consume_async(chunk))
+
+    def poll(self, token) -> None:
+        """Drain the halt signals of EVERY launch since the last drain, in
+        dispatch order (§4.4 pause protocol, host side).  Prefetch can put
+        several chunks in flight before the first poll; a launch that ran
+        clean costs one info read and is dropped, a halted one replays from
+        each program's first halted morsel — exact, because the kernel's
+        room check halts BEFORE a morsel commits and is monotone in the
+        table count, so a chunk dispatched after a halted one committed
+        nothing past its own recorded halt either.  An entry halted under a
+        state the queue has since grown is relaunched once before growing
+        again (``_grow_gen``), so a burst of stale halts can't cascade into
+        spurious capacity doublings.  Zero reads when UNCHECKED."""
+        if not self._checked:
+            return
+        fk = self._fk
+        while self._pending:
+            entry = self._pending[0]
+            while True:
+                km, vm, inf, gen = entry
+                info = np.asarray(jax.device_get(inf))
+                halted = info[:, fk.INFO_HALTED] != 0
+                if not halted.any():
+                    break
+                cmax = int(info[:, fk.INFO_COUNT].max())
+                if not self._grow:
+                    raise _overflow_error(cmax, self._state.max_groups)
+                if gen == self._grow_gen:
+                    st = self._state
+                    new_g, new_c = st.max_groups, st.capacity
+                    if cmax > st.max_groups - self._m:
+                        # bound headroom: the scan pipeline's blind-retry jump
+                        new_g = max(4 * st.max_groups, cmax + self._m, 64)
+                    if cmax > int(self._lf * st.capacity) or new_g == st.max_groups:
+                        # capacity pressure — or a mid-morsel saturation below
+                        # both thresholds (probe clustering): force the
+                        # doubling so the replay is guaranteed progress
+                        new_c = 2 * st.capacity
+                    new_c = max(new_c, table_capacity(new_g, self._lf))
+                    if new_g > st.max_groups:
+                        self._bound_grows += 1
+                    if new_c > st.capacity:
+                        self._migrations += 1
+                    self._state = fk.grow_fused_state(
+                        st, self._kinds, new_max_groups=new_g,
+                        new_capacity=new_c, load_factor=self._lf,
+                    )
+                    self._grow_gen += 1
+                npm = km.shape[0] // self._P
+                starts = jnp.asarray(
+                    np.minimum(info[:, fk.INFO_FIRST_HALT], npm), jnp.int32
+                )
+                self._launch(km, vm, starts)
+                entry[2], entry[3] = self._info, self._grow_gen
+            self._pending.pop(0)
+
+    def _merged(self):
+        fk = self._fk
+        counts = np.asarray(jax.device_get(self._state.count))
+        target = self._state.max_groups
+        if self._P > 1:
+            # the union of P local ticket spaces can exceed one local bound;
+            # GROW widens the merge target, RAISE detects via the merged
+            # table's own sticky overflow below
+            total = int(counts.sum())
+            if self._grow and total > target:
+                target = total
+        table, accs = fk.merge_fused_state(
+            self._state, self._kinds, max_groups=target,
+            load_factor=self._lf,
+        )
+        overflowed = bool(counts.max(initial=0) > self._state.max_groups)
+        if self._checked and (
+            overflowed or bool(jax.device_get(table.overflowed))
+        ):
+            raise _overflow_error(int(jax.device_get(table.count)), target)
+        return table, accs, target
+
+    def finalize(self) -> Table:
+        self.poll(self._info)
+        table, accs, bound = self._merged()
+        acc_by_spec = dict(zip(self._specs, accs))
+        out = build_result_table(
+            self._plan.aggs, lambda c, k: acc_by_spec[(c, k)],
+            table.key_by_ticket, table.count, bound,
+        )
+        self.publish()
+        return out
+
+    def device_table_bytes(self) -> int:
+        return self._state.nbytes()
+
+    def event_counts(self) -> dict | None:
+        if not self._collect:
+            return None
+        vec, counts = jax.device_get((self._state.events, self._state.count))
+        out = obs_metrics.event_vector_to_dict(np.asarray(vec).sum(axis=0))
+        count = int(np.asarray(counts).sum())
+        out["migrations"] = self._migrations
+        out["bound_grows"] = self._bound_grows
+        out["num_groups"] = count
+        out["table_capacity"] = self._state.capacity
+        out["table_load_factor"] = count / self._state.capacity
+        return out
 
 
 class _PartitionedExecutor(_IncrementalMergeExecutor):

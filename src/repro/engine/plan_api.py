@@ -74,6 +74,18 @@ from repro.obs import trace
 
 STRATEGIES = ("auto", "concurrent", "partitioned", "hybrid", "pallas", "sharded")
 
+# THE kernel selector (ExecutionPolicy.kernel): how the concurrent hash
+# pipeline's hot loop runs.  ``None`` defers to the planner (auto plans pick
+# "fused" when the estimated table fits the VMEM budget — core/adaptive.py);
+# "off" forces the pure-jnp scan body; "scan_body" swaps the Pallas
+# segment-update kernel into the scan body; "split" launches the two-kernel
+# ticket + segment-aggregate route per chunk; "fused" streams chunks through
+# the single VMEM-resident fused kernel (kernels/fused_groupby.py).  The
+# legacy spellings lower onto this selector with a DeprecationWarning:
+# ``strategy="pallas"`` → kernel="split", ``use_kernel=True`` →
+# kernel="scan_body".
+KERNELS = (None, "off", "scan_body", "split", "fused")
+
 
 class SaturationPolicy:
     """What to do when the stream holds more distinct keys than planned."""
@@ -102,7 +114,11 @@ class ExecutionPolicy:
     update: str | None = None         # scatter|onehot|sort_segment|serialized; None → planner
     load_factor: float = 0.5
     capacity: int | None = None       # probe-table slots; None → hashing.table_capacity
-    use_kernel: bool = False          # concurrent: Pallas segment-update scan body
+    # THE kernel selector: None → planner | off | scan_body | split | fused
+    # (see KERNELS above).  ``use_kernel`` is its deprecated boolean alias.
+    kernel: str | None = None
+    kernel_programs: int = 1          # fused: per-grid-program local tables
+    use_kernel: bool = False          # DEPRECATED alias for kernel="scan_body"
     ticketing: str = "hash"           # concurrent: hash | sort | direct
     key_domain: int | None = None     # direct ticketing: bounded key domain
     # streaming ingest
@@ -167,6 +183,13 @@ class GroupByPlan:
                 f"unknown saturation policy {self.saturation!r}; "
                 f"available: {SaturationPolicy.ALL}"
             )
+        if self.execution.kernel not in KERNELS:
+            raise ValueError(
+                f"unknown kernel selector {self.execution.kernel!r}; "
+                f"available: {KERNELS}"
+            )
+        if self.execution.kernel_programs < 1:
+            raise ValueError("kernel_programs must be >= 1")
         if not self.aggs:
             raise ValueError("at least one AggSpec required")
         if not self.keys:
@@ -466,6 +489,7 @@ __all__ = [
     "ExecutionPolicy",
     "GroupByOverflowError",
     "GroupByPlan",
+    "KERNELS",
     "SaturationPolicy",
     "STRATEGIES",
     "StreamHandle",

@@ -188,7 +188,8 @@ class SpillExecutor(_ExecutorBase):
         self._op = GroupByOperator(
             key_columns=["__key__"], aggs=list(p.aggs), max_groups=self._budget,
             morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
-            use_kernel=ex.use_kernel, load_factor=ex.load_factor,
+            use_kernel=ex.kernel == "scan_body" or ex.use_kernel,
+            load_factor=ex.load_factor,
             pipeline=ex.pipeline, capacity=ex.capacity, raw_keys=True,
             check_overflow=True, grow_bound=False,
             collect_events=_instrument(plan),
@@ -309,7 +310,8 @@ class SpillExecutor(_ExecutorBase):
         return GroupByOperator(
             key_columns=["__key__"], aggs=list(p.aggs), max_groups=max(card, 1),
             morsel_rows=ex.morsel_rows, update=ex.update or "scatter",
-            use_kernel=ex.use_kernel, load_factor=ex.load_factor,
+            use_kernel=ex.kernel == "scan_body" or ex.use_kernel,
+            load_factor=ex.load_factor,
             pipeline=ex.pipeline, raw_keys=True,
             check_overflow=True, grow_bound=False,
         )

@@ -4,12 +4,46 @@ ticket_hash — Folklore* GET_OR_INSERT (VMEM table, claim-protocol CAS
   analogue, fuzzy ticketer), the paper's §3.1 contribution.
 segment_agg — dense partial-aggregate update (§3.2), scatter and one-hot
   MXU strategies.
+fused_groupby — the production fused route: ticketing + aggregation in one
+  VMEM-resident kernel with per-grid-program local tables and a
+  second-level merge (``ExecutionPolicy.kernel="fused"``).
+
+``groupby_kernel`` is the ONE front door for direct kernel callers
+(``fused=`` selects the route); engine code selects kernels through the
+single ``ExecutionPolicy.kernel`` policy instead.  The legacy direct entry
+points (``groupby_pallas``, ``ticket``, ``segment_aggregate``) keep working
+behind deprecation shims that warn once per process.
 
 ops.py: jitted public wrappers (auto interpret-mode off-TPU).
 ref.py: pure-jnp oracles; tests assert bit-identical tickets and allclose
 aggregates across shape/dtype sweeps.
 """
-from repro.kernels.fused_groupby import fused_groupby_pallas
-from repro.kernels.ops import groupby_pallas, multi_block_ticket, segment_aggregate, ticket
+from repro.kernels.fused_groupby import (
+    FusedState,
+    fused_consume,
+    fused_groupby_pallas,
+    grow_fused_state,
+    init_fused_state,
+    merge_fused_state,
+)
+from repro.kernels.ops import (
+    groupby_kernel,
+    groupby_pallas,
+    multi_block_ticket,
+    segment_aggregate,
+    ticket,
+)
 
-__all__ = ["fused_groupby_pallas", "groupby_pallas", "multi_block_ticket", "segment_aggregate", "ticket"]
+__all__ = [
+    "FusedState",
+    "fused_consume",
+    "fused_groupby_pallas",
+    "groupby_kernel",
+    "groupby_pallas",
+    "grow_fused_state",
+    "init_fused_state",
+    "merge_fused_state",
+    "multi_block_ticket",
+    "segment_aggregate",
+    "ticket",
+]

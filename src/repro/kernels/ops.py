@@ -21,6 +21,7 @@ bounded gaps (≤ blocks · slack), exactly the fuzzy-ticketer contract.
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +35,24 @@ def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# Deprecation shims: the engine selects kernels through the single
+# ``ExecutionPolicy.kernel`` policy; the direct kernel entry points keep
+# working but warn ONCE per process (per alias) so sweeps/benches don't
+# drown in repeats.  ``reset_deprecation_warnings`` re-arms them (tests).
+_WARNED: set = set()
+
+
+def _warn_once(name: str, message: str) -> None:
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(message, DeprecationWarning, stacklevel=3)
+
+
+def reset_deprecation_warnings() -> None:
+    _WARNED.clear()
+
+
 def _pad_to(x: jnp.ndarray, multiple: int, fill):
     n = x.shape[0]
     rem = (-n) % multiple
@@ -42,7 +61,7 @@ def _pad_to(x: jnp.ndarray, multiple: int, fill):
     return jnp.concatenate([x, jnp.full((rem,), fill, x.dtype)])
 
 
-def ticket(
+def _ticket(
     keys: jnp.ndarray,
     *,
     capacity: int,
@@ -50,12 +69,12 @@ def ticket(
     morsel_size: int = 1024,
     interpret: bool | None = None,
 ):
-    """Kernel-backed GET_OR_INSERT over a key column (any length).
+    """Kernel-backed GET_OR_INSERT over a key column (any length) — the
+    engine-internal entry (no deprecation warning).
 
     Contract: the returned ``count`` must be checked against ``max_groups``
     by the caller — tickets past the bound had their ``key_by_ticket``
-    scatters dropped (truncated materialization).  ``groupby_pallas`` does
-    this check for you (``raise_on_overflow``)."""
+    scatters dropped (truncated materialization)."""
     if interpret is None:
         interpret = _auto_interpret()
     n = keys.shape[0]
@@ -67,7 +86,29 @@ def ticket(
     return tickets[:n], kbt, count
 
 
-def segment_aggregate(
+def ticket(
+    keys: jnp.ndarray,
+    *,
+    capacity: int,
+    max_groups: int,
+    morsel_size: int = 1024,
+    interpret: bool | None = None,
+):
+    """DEPRECATED direct kernel call — select kernels through
+    ``ExecutionPolicy.kernel`` (``"split"``/``"fused"``) or the
+    :func:`groupby_kernel` front door instead."""
+    _warn_once(
+        "ticket",
+        "kernels.ops.ticket is deprecated; select the kernel route via "
+        "ExecutionPolicy.kernel ('split'/'fused') or groupby_kernel()",
+    )
+    return _ticket(
+        keys, capacity=capacity, max_groups=max_groups,
+        morsel_size=morsel_size, interpret=interpret,
+    )
+
+
+def _segment_aggregate(
     tickets: jnp.ndarray,
     values: jnp.ndarray,
     *,
@@ -84,6 +125,30 @@ def segment_aggregate(
     vp = _pad_to(values.astype(jnp.float32), morsel_size, 0.0)
     return segment_agg_pallas(
         tp, vp, num_groups=num_groups, kind=kind, strategy=strategy,
+        morsel_size=morsel_size, interpret=interpret,
+    )
+
+
+def segment_aggregate(
+    tickets: jnp.ndarray,
+    values: jnp.ndarray,
+    *,
+    num_groups: int,
+    kind: str = "sum",
+    strategy: str = "scatter",
+    morsel_size: int = 1024,
+    interpret: bool | None = None,
+):
+    """DEPRECATED direct kernel call — select kernels through
+    ``ExecutionPolicy.kernel`` or the :func:`groupby_kernel` front door."""
+    _warn_once(
+        "segment_aggregate",
+        "kernels.ops.segment_aggregate is deprecated; select the kernel "
+        "route via ExecutionPolicy.kernel ('split'/'fused') or "
+        "groupby_kernel()",
+    )
+    return _segment_aggregate(
+        tickets, values, num_groups=num_groups, kind=kind, strategy=strategy,
         morsel_size=morsel_size, interpret=interpret,
     )
 
@@ -109,7 +174,7 @@ def make_scan_update_fn(
     """
 
     def update_fn(acc, tickets, values, kind: str = "sum"):
-        part = segment_aggregate(
+        part = _segment_aggregate(
             tickets, values, num_groups=acc.shape[0], kind=kind,
             strategy=strategy, morsel_size=min(morsel_size, tickets.shape[0]),
             interpret=interpret,
@@ -122,6 +187,55 @@ def make_scan_update_fn(
         return jnp.minimum(acc, part) if kind == "min" else jnp.maximum(acc, part)
 
     return update_fn
+
+
+def groupby_kernel(
+    keys: jnp.ndarray,
+    values: jnp.ndarray | None = None,
+    *,
+    kind: str = "count",
+    max_groups: int,
+    capacity: int | None = None,
+    morsel_size: int = 1024,
+    update_strategy: str = "scatter",
+    interpret: bool | None = None,
+    saturation: str = "raise",
+    fused: bool = False,
+    programs: int = 1,
+):
+    """THE kernel front door: single-aggregate kernel-backed GROUP BY over
+    raw arrays (paper Fig. 2 end-to-end), running behind the executor seam
+    with ``ExecutionPolicy.kernel`` doing the selection.
+
+    ``fused=False`` runs the split ticket + segment-aggregate route
+    (``kernel="split"``); ``fused=True`` streams through the single
+    VMEM-resident fused kernel (``kernel="fused"``), with ``programs``
+    per-grid-program local tables merged at the boundary.  Engine callers
+    should construct a :class:`~repro.engine.plan_api.GroupByPlan` and set
+    ``execution.kernel`` directly; this wrapper exists for direct kernel
+    users and benches.
+    """
+    from repro.engine.plan_api import (
+        AggSpec,
+        ExecutionPolicy,
+        GroupByPlan,
+        arrays_as_table,
+        execute,
+    )
+
+    table, _ = arrays_as_table(keys, values)
+    agg = AggSpec("count") if kind == "count" else AggSpec(kind, "v")
+    plan = GroupByPlan(
+        keys=("__key__",), aggs=(agg,), strategy="concurrent",
+        max_groups=max_groups, saturation=saturation, raw_keys=True,
+        execution=ExecutionPolicy(
+            kernel="fused" if fused else "split", kernel_programs=programs,
+            capacity=capacity, morsel_size=morsel_size,
+            update=update_strategy, interpret=interpret,
+        ),
+    )
+    out = execute(plan, table)
+    return out["key"], out[agg.name], out["__num_groups__"][0]
 
 
 def groupby_pallas(
@@ -137,41 +251,31 @@ def groupby_pallas(
     raise_on_overflow: bool = True,
     saturation: str | None = None,
 ):
-    """Kernel-backed fully concurrent GROUP BY (paper Fig. 2 end-to-end) —
-    adapter over ``GroupByPlan(strategy="pallas")``; the kernel pipeline
-    (ticket → segment update → materialize) runs behind the executor seam.
+    """DEPRECATED legacy adapter (the pre-``kernel=`` spelling of the split
+    kernel route) — use :func:`groupby_kernel` or a plan with
+    ``ExecutionPolicy.kernel="split"``.  Signature-compatible: behaves
+    exactly like ``groupby_kernel(..., fused=False)``.
 
     ``raise_on_overflow`` (default) maps to ``saturation="raise"``: the
     returned ticket count is checked against ``max_groups`` on the host and
-    a RuntimeError is raised when the stream held more distinct keys — the
+    an error is raised when the stream held more distinct keys — the
     kernel's ``key_by_ticket``/acc scatters past the bound are dropped, so
     the materialization would otherwise be silently truncated.  Pass False
     (= ``saturation="unchecked"``) to skip the blocking device sync this
-    costs (e.g. in throughput benchmarks), or ``saturation="grow"`` to
-    recover by re-launching with a grown bound.
+    costs, or ``saturation="grow"`` to recover with a grown bound.
     """
-    from repro.engine.plan_api import (
-        AggSpec,
-        ExecutionPolicy,
-        GroupByPlan,
-        arrays_as_table,
-        execute,
+    _warn_once(
+        "groupby_pallas",
+        "kernels.ops.groupby_pallas is deprecated; use groupby_kernel() or "
+        "a GroupByPlan with ExecutionPolicy.kernel='split'",
     )
-
     if saturation is None:
         saturation = "raise" if raise_on_overflow else "unchecked"
-    table, _ = arrays_as_table(keys, values)
-    agg = AggSpec("count") if kind == "count" else AggSpec(kind, "v")
-    plan = GroupByPlan(
-        keys=("__key__",), aggs=(agg,), strategy="pallas",
-        max_groups=max_groups, saturation=saturation, raw_keys=True,
-        execution=ExecutionPolicy(
-            capacity=capacity, morsel_size=morsel_size,
-            update=update_strategy, interpret=interpret,
-        ),
+    return groupby_kernel(
+        keys, values, kind=kind, max_groups=max_groups, capacity=capacity,
+        morsel_size=morsel_size, update_strategy=update_strategy,
+        interpret=interpret, saturation=saturation, fused=False,
     )
-    out = execute(plan, table)
-    return out["key"], out[agg.name], out["__num_groups__"][0]
 
 
 def multi_block_ticket(
@@ -200,7 +304,7 @@ def multi_block_ticket(
         sel = bid == b
         # static-shape per-block stream: mask non-members to EMPTY
         kblock = jnp.where(sel, kb, EMPTY_KEY)
-        tb, kbt_b, cnt_b = ticket(
+        tb, kbt_b, cnt_b = _ticket(
             kblock, capacity=capacity_per_block,
             max_groups=max_groups_per_block,
             morsel_size=morsel_size, interpret=interpret,

@@ -5,6 +5,9 @@ plain jnp (it is core.ticketing.get_or_insert scanned over morsels), so
 ticket values must match the kernel **bit-for-bit**.  ``sort_ticket_ref``
 is the order-insensitive oracle (sort-based) used for map-level checks.
 ``segment_agg_ref`` is jax.ops.segment_* on the raw rows.
+``fused_groupby_ref`` is the fused kernel's oracle: get_or_insert + per-spec
+scatter over the same morsel walk, so tickets match bit-for-bit and the
+accumulators see the identical per-morsel update order.
 """
 from __future__ import annotations
 
@@ -52,3 +55,55 @@ def segment_agg_ref(tickets, values, *, num_groups: int, kind: str = "sum"):
         return jax.ops.segment_min(vv, tt, num_segments=num_groups + 1)[:num_groups]
     vv = jnp.where(ok, v, -jnp.inf)
     return jax.ops.segment_max(vv, tt, num_segments=num_groups + 1)[:num_groups]
+
+
+_NEUTRAL = {"sum": 0.0, "count": 0.0, "min": jnp.inf, "max": -jnp.inf}
+
+
+@functools.partial(
+    jax.jit, static_argnames=("capacity", "max_groups", "specs", "morsel_size")
+)
+def fused_groupby_ref(
+    keys, values, *, capacity: int, max_groups: int, specs: tuple,
+    morsel_size: int = 1024,
+):
+    """Interpretable oracle for the fused kernel: the same morsel walk with
+    ``get_or_insert`` ticketing and per-spec scatter accumulation.
+
+    ``values`` is (V, n) value planes; ``specs`` is the fused kernel's
+    ``((plane_idx | -1, kind), ...)`` accumulator map (-1 → count/ones).
+    Returns ``(key_by_ticket, accs, count)`` with ``accs`` shaped (S, G) —
+    tickets (and hence ``key_by_ticket`` order) match the kernel
+    bit-for-bit; sums match because the per-morsel scatter order is
+    identical."""
+    n = keys.shape[0]
+    assert n % morsel_size == 0
+    table = tk.make_table(capacity, max_groups=max_groups)
+    km = keys.astype(jnp.uint32).reshape(-1, morsel_size)
+    vm = values.astype(jnp.float32).reshape(values.shape[0], -1, morsel_size)
+    accs = jnp.stack(
+        [jnp.full((max_groups,), _NEUTRAL[k], jnp.float32) for _, k in specs]
+    )
+
+    def step(carry, morsel):
+        table, accs = carry
+        mk, mv = morsel
+        tickets, table = tk.get_or_insert(table, mk)
+        ok = tickets >= 0
+        tt = jnp.where(ok, tickets, max_groups)
+        new = []
+        for s, (plane, kind) in enumerate(specs):
+            v = jnp.ones((morsel_size,), jnp.float32) if plane < 0 else mv[plane]
+            vv = jnp.where(ok, v, _NEUTRAL[kind])
+            if kind in ("sum", "count"):
+                new.append(accs[s].at[tt].add(vv, mode="drop"))
+            elif kind == "min":
+                new.append(accs[s].at[tt].min(vv, mode="drop"))
+            else:
+                new.append(accs[s].at[tt].max(vv, mode="drop"))
+        return (table, jnp.stack(new)), None
+
+    (table, accs), _ = jax.lax.scan(
+        step, (table, accs), (km, jnp.moveaxis(vm, 0, 1))
+    )
+    return table.key_by_ticket, accs, table.count

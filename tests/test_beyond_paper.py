@@ -1,54 +1,19 @@
-"""Tests for the beyond-paper extensions: the fused ticket+update kernel
-and the §6-future-work hybrid (register + concurrent) aggregation."""
+"""Tests for the beyond-paper extensions: the §6-future-work hybrid
+(register + concurrent) aggregation.  The fused ticket+update kernel's
+tests live with the other kernel tests in test_kernels.py now that the
+fused route is a production kernel, not a beyond-paper extension."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro.core import groupby_oracle
 from repro.core.hybrid import detect_heavy_hitters, hybrid_groupby
-from repro.kernels.fused_groupby import fused_groupby_pallas
 
 RNG = np.random.default_rng(9)
 
 
 def as_map(keys, vals, n):
     return {int(k): float(v) for k, v in zip(np.asarray(keys)[:n], np.asarray(vals)[:n])}
-
-
-@pytest.mark.parametrize("kind", ["sum", "count", "min", "max"])
-def test_fused_kernel_matches_oracle(kind):
-    keys = RNG.integers(0, 300, size=4096).astype(np.uint32)
-    vals = RNG.normal(size=4096).astype(np.float32)
-    kbt, acc, cnt = fused_groupby_pallas(
-        jnp.asarray(keys), jnp.asarray(vals), capacity=1024, max_groups=512,
-        kind=kind, morsel_size=512,
-    )
-    ref = groupby_oracle(jnp.asarray(keys), jnp.asarray(vals), kind=kind, max_groups=512)
-    got = as_map(kbt, acc, int(cnt))
-    want = as_map(ref.keys, ref.values, int(ref.num_groups))
-    assert got.keys() == want.keys()
-    for k in want:
-        assert abs(got[k] - want[k]) < 1e-2, (kind, k)
-
-
-def test_fused_kernel_matches_two_phase():
-    """Fused must agree with the two-kernel pipeline bit-for-bit on tickets
-    (same protocol) and allclose on aggregates."""
-    from repro.kernels.ops import groupby_pallas
-
-    keys = RNG.integers(0, 200, size=2048).astype(np.uint32)
-    vals = RNG.normal(size=2048).astype(np.float32)
-    kbt_f, acc_f, cnt_f = fused_groupby_pallas(
-        jnp.asarray(keys), jnp.asarray(vals), capacity=512, max_groups=256,
-        kind="sum", morsel_size=512,
-    )
-    kbt_2, acc_2, cnt_2 = groupby_pallas(
-        jnp.asarray(keys), jnp.asarray(vals), kind="sum", max_groups=256,
-        capacity=512, morsel_size=512,
-    )
-    assert int(cnt_f) == int(cnt_2)
-    assert np.array_equal(np.asarray(kbt_f)[: int(cnt_f)], np.asarray(kbt_2)[: int(cnt_2)])
-    np.testing.assert_allclose(np.asarray(acc_f), np.asarray(acc_2), rtol=1e-5, atol=1e-5)
 
 
 @pytest.mark.parametrize("kind", ["sum", "count", "min", "max"])
